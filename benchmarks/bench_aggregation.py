@@ -1,0 +1,101 @@
+"""Paper §3.1 — event-aggregation throughput vs bucket size.
+
+Reproduces the paper's central quantitative claim: single 30-bit events can
+only be shifted out at one event per two 210 MHz clocks due to header
+overhead, while events arrive at up to one per clock; bucket aggregation
+(up to 124 events / 496 B per Extoll packet) restores line rate.
+
+Columns: events/packet, wire efficiency, drain rate (events/cycle),
+sustainable input rate, plus a closed-loop cycle-model measurement of
+delivered throughput with/without aggregation.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregator as agg
+from repro.core import bucket as bk
+from repro.core import events as ev
+
+
+def analytic_rows():
+    rows = []
+    for n in (1, 2, 4, 8, 16, 31, 62, 124):
+        eff = float(ev.wire_efficiency(n))
+        cyc = int(ev.wire_cycles(n))
+        rows.append({
+            "events_per_packet": n,
+            "wire_bytes": int(ev.packet_bytes(n)),
+            "wire_efficiency": round(eff, 4),
+            "drain_events_per_cycle": round(n / cyc, 3),
+        })
+    return rows
+
+
+def model_throughput(aggregatable: bool, T: int = 2000, rate: float = 1.0,
+                     seed: int = 0):
+    """Closed-loop cycle model: offered load `rate` events/cycle; measure
+    delivered events/cycle. aggregatable=False -> every event to a distinct
+    destination (no aggregation possible), the paper's problem case."""
+    n_dest = 256 if not aggregatable else 4
+    cfg = bk.BucketConfig(n_buckets=8, capacity=124, n_dest=n_dest,
+                          flush_margin=8 if aggregatable else 10_000,
+                          queue=8)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if aggregatable:
+        dests = jax.random.randint(k1, (T, 1), 0, n_dest)
+        ts = (jnp.arange(T).reshape(T, 1) + 300) & ev.TS_MASK
+    else:
+        dests = (jnp.arange(T).reshape(T, 1) * 97) % n_dest   # all distinct
+        ts = jnp.full((T, 1), 1, jnp.int32)                   # instantly due
+    valid = jax.random.bernoulli(k2, rate, (T, 1))
+    words = ev.pack(dests, ts, valid)
+    st, out = bk.run_trace(cfg, words, dests)
+    delivered = int(out.sent_count.sum())
+    offered = int(np.asarray(ev.is_valid(words)).sum())
+    stalled = int(out.stalled.sum())
+    return delivered / T, offered / T, stalled / max(offered, 1)
+
+
+def main(report):
+    for row in analytic_rows():
+        report(f"aggregation/analytic/n={row['events_per_packet']}",
+               row["drain_events_per_cycle"],
+               f"eff={row['wire_efficiency']} bytes={row['wire_bytes']}")
+
+    t0 = time.perf_counter()
+    thr_un, off_un, stall_un = model_throughput(False)
+    t1 = time.perf_counter()
+    thr_ag, off_ag, stall_ag = model_throughput(True)
+    t2 = time.perf_counter()
+    report("aggregation/model/unaggregated_events_per_cycle",
+           round(thr_un, 4),
+           f"offered={off_un:.2f}/cyc stallfrac={stall_un:.3f} "
+           f"({(t1 - t0) * 1e6:.0f}us)")
+    report("aggregation/model/aggregated_events_per_cycle",
+           round(thr_ag, 4),
+           f"offered={off_ag:.2f}/cyc stallfrac={stall_ag:.3f} "
+           f"({(t2 - t1) * 1e6:.0f}us)")
+    report("aggregation/model/speedup", round(thr_ag / max(thr_un, 1e-9), 2),
+           "paper claim: >= 2x (1/2 evt/clk -> ~1 evt/clk)")
+
+    # vectorized window path cost: same traffic, window aggregation
+    N, D = 4096, 64
+    k = jax.random.PRNGKey(0)
+    words = ev.pack(jax.random.randint(k, (N,), 0, 1 << 12),
+                    jax.random.randint(k, (N,), 0, 1 << 15))
+    dests = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, D)
+    b = agg.aggregate(words, dests, None, D, 256, impl="sort")
+    cost = agg.window_cost(b.counts)
+    un = agg.unaggregated_cost(N)
+    report("aggregation/window/bytes_aggregated", int(cost.bytes),
+           f"eff={float(cost.efficiency):.3f}")
+    report("aggregation/window/bytes_unaggregated", int(un.bytes),
+           f"eff={float(un.efficiency):.3f}")
+    report("aggregation/window/byte_reduction",
+           round(int(un.bytes) / max(int(cost.bytes), 1), 2),
+           "headers amortized across 124-event packets")

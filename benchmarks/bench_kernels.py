@@ -1,0 +1,61 @@
+"""Kernel microbenchmarks: Pallas (interpret) correctness-path cost vs the
+jnp reference paths on CPU, plus the kernels' modelled TPU arithmetic.
+
+NOTE: interpret-mode wall time is NOT TPU performance; the number that
+matters for the roofline is the bytes/flops model printed alongside.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregator as agg
+from repro.core import events as ev
+from repro.kernels import ops
+from repro.snn.lif import LIFParams, init_state
+
+
+def wall(fn, *args, iters=5):
+    jax.tree_util.tree_leaves(fn(*args))[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(report):
+    N, D, C = 4096, 64, 128
+    k = jax.random.PRNGKey(0)
+    words = ev.pack(jax.random.randint(k, (N,), 0, 1 << 12),
+                    jax.random.randint(k, (N,), 0, 1 << 15))
+    dests = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, D)
+    guids = jnp.zeros((N,), jnp.int32)
+
+    us_sort = wall(jax.jit(lambda: agg.aggregate(words, dests, guids, D, C,
+                                                 impl="sort")))
+    us_oh = wall(jax.jit(lambda: agg.aggregate(words, dests, guids, D, C,
+                                               impl="onehot")))
+    report("kernels/aggregate_sort_us", round(us_sort, 1), f"N={N} D={D}")
+    report("kernels/aggregate_onehot_us", round(us_oh, 1), f"N={N} D={D}")
+    # kernel VMEM/arithmetic model (TPU target)
+    vmem_kb = (N * 4 * 3 + 8 * C * 8) / 1024
+    report("kernels/bucket_scatter_vmem_KiB", round(vmem_kb, 1),
+           "events+dests+guids resident + (D_TILE,C) out block")
+    report("kernels/bucket_scatter_work", N * D * C,
+           "select-reduce ops (VPU int32)")
+
+    n = 65536
+    p = LIFParams()
+    st = init_state(n, p, jax.random.PRNGKey(1))
+    exc = jax.random.uniform(jax.random.PRNGKey(2), (n,)) * 1000
+    inh = jnp.zeros((n,))
+    from repro.snn import lif as lif_mod
+    us_ref = wall(jax.jit(lambda s: lif_mod.step(s, p, exc, inh)), st)
+    report("kernels/lif_ref_us", round(us_ref, 1), f"N={n} fused jnp")
+    hbm_bytes = n * 4 * (4 + 2 + 5)       # read 4 state + 2 input, write 5
+    report("kernels/lif_step_hbm_bytes", hbm_bytes,
+           f"-> {hbm_bytes / 819e9 * 1e9:.1f} ns roofline on v5e HBM")

@@ -1,0 +1,52 @@
+"""Paper §1 — Extoll link budget and BrainScaleS topology load.
+
+The paper gives the raw numbers (12 lanes x 8.4 Gbit/s per link, 7 links
+per Tourmalet, 48 FPGAs -> 8 concentrators per wafer) but no load analysis;
+this bench derives one: what biological real-time factor the interconnect
+sustains for the full-scale cortical microcircuit spread over N wafers,
+with and without aggregation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core import torus
+from repro.snn import microcircuit as mc
+
+
+def main(report):
+    link_bytes = torus.LINK_GBYTES * 1e9
+    report("link/raw_GBps", round(torus.LINK_GBYTES, 2),
+           "12 lanes x 8.4 Gbit/s")
+
+    # full-scale microcircuit: 77k neurons, mean rate ~4 Hz biological;
+    # BrainScaleS runs at 1e3-1e4 x biological speedup.
+    n_neurons = int(mc.FULL_SIZES.sum())
+    mean_rate_bio = 4.0
+    for speedup in (1e3, 1e4):
+        ev_per_s = n_neurons * mean_rate_bio * speedup
+        # inter-wafer fraction ~ connections leaving a wafer (2 wafers,
+        # random split: ~50% of the 0.3B synapses cross)
+        cross_frac = 0.5
+        cross_events = ev_per_s * cross_frac
+        for aggregated, n_pkt in (("no", 1), ("yes", 124)):
+            bytes_per_event = float(ev.packet_bytes(n_pkt)) / n_pkt
+            gbytes = cross_events * bytes_per_event / 1e9
+            links_needed = gbytes * 1e9 / link_bytes
+            report(
+                f"link/microcircuit/speedup={speedup:.0e}/agg={aggregated}",
+                round(gbytes, 2),
+                f"GB/s cross-wafer; {links_needed:.1f} links' worth",
+            )
+
+    # torus link load for the wafer topology (paper Fig. 1)
+    for n_wafers in (2, 4, 8):
+        t = torus.wafer_topology(n_wafers)
+        traffic = torus.microcircuit_traffic(
+            t.n_nodes, events_per_s=n_neurons * mean_rate_bio * 1e4)
+        max_load = t.max_link_load(traffic)
+        report(f"link/torus/wafers={n_wafers}/max_link_GBps",
+               round(max_load / 1e9, 3),
+               f"nodes={t.n_nodes} mean_hops={t.mean_hops():.2f} "
+               f"bisection={t.bisection_gbytes():.0f}GB/s")

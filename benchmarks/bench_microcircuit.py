@@ -1,0 +1,79 @@
+"""Paper §4 — the named target workload: multi-wafer cortical microcircuit.
+
+Measures the single-process simulation rate of the windowed simulator (one
+shard, no collective — wall time per biological second at reduced scale)
+and the communication profile (events, wire bytes, aggregation efficiency)
+per flush window.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregator as agg
+from repro.snn import lif, microcircuit as mc, network
+
+
+def main(report):
+    spec = mc.MicrocircuitSpec(scale=0.004)
+    w, is_inh = spec.weight_matrix()
+    n = spec.n_neurons
+    report("microcircuit/neurons", n, f"scale={spec.scale}")
+    report("microcircuit/synapses", int((w != 0).sum()), "")
+
+    # single-shard LIF loop throughput (jit, steady state)
+    p = lif.LIFParams()
+    w_exc = jnp.asarray(np.where(~is_inh[None, :], w, 0.0))
+    w_inh = jnp.asarray(np.where(is_inh[None, :], w, 0.0))
+    bg = jnp.asarray(spec.bg_rates())
+
+    @jax.jit
+    def step(state, key):
+        exc_in = w_exc @ state[-1] + lif.poisson_input(key, n, bg, 87.8, p.dt)
+        inh_in = w_inh @ state[-1]
+        st = lif.LIFState(*state[:4])
+        st, spk = lif.step(st, p, exc_in, inh_in)
+        return (st.v, st.i_exc, st.i_inh, st.refrac,
+                spk.astype(jnp.float32)), spk
+
+    state = lif.init_state(n, p, jax.random.PRNGKey(0))
+    carry = (state.v, state.i_exc, state.i_inh, state.refrac,
+             jnp.zeros(n))
+    # warmup + timed
+    for i in range(10):
+        carry, _ = step(carry, jax.random.PRNGKey(i))
+    jax.block_until_ready(carry)
+    t0 = time.perf_counter()
+    spikes = 0
+    T = 200
+    for i in range(T):
+        carry, spk = step(carry, jax.random.PRNGKey(100 + i))
+        spikes += int(spk.sum())
+    jax.block_until_ready(carry)
+    dt_wall = time.perf_counter() - t0
+    us_per_step = dt_wall / T * 1e6
+    bio_ms = T * p.dt
+    report("microcircuit/us_per_dt_step", round(us_per_step, 1),
+           f"{dt_wall / (bio_ms / 1e3):.1f}x slower than biology at "
+           f"scale={spec.scale} (CPU)")
+    rate = spikes / (n * T * p.dt * 1e-3)
+    report("microcircuit/mean_rate_hz", round(rate, 1),
+           "reduced-scale dynamics (communication test, not rate-faithful)")
+
+    # communication profile per flush window (8 steps)
+    part = network.build_partition(w, is_inh, n_shards=4)
+    rates = np.full(part.n_neurons, rate)
+    traffic = network.traffic_matrix(part, rates)
+    report("microcircuit/cross_shard_Bps", round(float(traffic.sum()), 1),
+           f"4 shards; max pair={traffic.max():.1f}")
+    # window aggregation efficiency at this rate
+    ev_per_window = rate * 1e-3 * 0.8 * part.n_neurons  # 0.8ms window
+    counts = np.random.default_rng(0).multinomial(
+        max(int(ev_per_window), 1), np.ones(4) / 4)
+    cost = agg.window_cost(jnp.asarray(counts))
+    un = agg.unaggregated_cost(int(ev_per_window))
+    report("microcircuit/window_wire_eff", round(float(cost.efficiency), 3),
+           f"vs unaggregated {float(un.efficiency):.3f}")

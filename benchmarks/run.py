@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>]
+Output: ``name,value,notes`` CSV rows on stdout.
+
+Modules:
+  bench_aggregation  paper §3.1 throughput claims (the central table)
+  bench_link         paper §1 link budget / wafer torus loads
+  bench_ringbuffer   paper §2.1 credit flow-control sizing
+  bench_renaming     paper §3.1 bucket renaming pressure
+  bench_microcircuit paper §4 target workload
+  bench_moe_dispatch beyond-paper: bucket dispatch as MoE EP
+  bench_kernels      Pallas kernel cost models
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_aggregation",
+    "bench_link",
+    "bench_ringbuffer",
+    "bench_renaming",
+    "bench_microcircuit",
+    "bench_moe_dispatch",
+    "bench_kernels",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    def report(name, value, notes=""):
+        print(f"{name},{value},{notes}")
+        sys.stdout.flush()
+
+    print("name,value,notes")
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+        t0 = time.perf_counter()
+        mod.main(report)
+        report(f"{mod_name}/_wall_s", round(time.perf_counter() - t0, 1))
+
+
+if __name__ == "__main__":
+    main()

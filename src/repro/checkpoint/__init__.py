@@ -1,0 +1,2 @@
+"""Atomic, reshard-on-restore checkpointing."""
+from repro.checkpoint import checkpointer  # noqa: F401

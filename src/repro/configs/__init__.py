@@ -1,0 +1,50 @@
+"""Config registry: ``get_config(name)`` / ``list_configs()``.
+
+One module per assigned architecture (exact published configs, source tags
+in each file) plus the paper's own BrainScaleS system config.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, RecurrentConfig, SSMConfig, ShapeConfig,
+    SHAPES, reduced,
+)
+
+ARCHS = (
+    "qwen3_32b",
+    "qwen15_4b",
+    "gemma2_9b",
+    "minicpm_2b",
+    "deepseek_moe_16b",
+    "arctic_480b",
+    "recurrentgemma_9b",
+    "mamba2_27b",
+    "qwen2_vl_7b",
+    "whisper_large_v3",
+)
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+_ALIAS.update({
+    "qwen3-32b": "qwen3_32b",
+    "qwen1.5-4b": "qwen15_4b",
+    "gemma2-9b": "gemma2_9b",
+    "minicpm-2b": "minicpm_2b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "arctic-480b": "arctic_480b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "mamba2-2.7b": "mamba2_27b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "whisper-large-v3": "whisper_large_v3",
+})
+
+
+def get_config(name: str) -> ModelConfig:
+    mod = _ALIAS.get(name, name).replace("-", "_").replace(".", "")
+    m = importlib.import_module(f"repro.configs.{mod}")
+    return m.CONFIG
+
+
+def list_configs():
+    return list(ARCHS)

@@ -1,0 +1,22 @@
+"""The paper's own system: BrainScaleS wafer modules on an Extoll torus.
+
+48 FPGAs/wafer gathered at 8 concentrator torus nodes (6 FPGAs each),
+8 HICANNs/FPGA, 124-event packet buckets.  Used by the SNN examples and
+benchmarks; not an LM architecture."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BrainScaleSConfig:
+    n_wafers: int = 4
+    fpgas_per_wafer: int = 48
+    concentrators_per_wafer: int = 8
+    hicanns_per_fpga: int = 8
+    bucket_capacity: int = 124       # 496 B / 4 B events
+    n_buckets: int = 16              # physical buckets per FPGA
+    flush_margin: int = 64           # systemtime slack
+    fpga_clock_mhz: float = 210.0
+    microcircuit_scale: float = 1.0
+
+
+CONFIG = BrainScaleSConfig()

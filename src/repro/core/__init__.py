@@ -1,0 +1,20 @@
+"""The paper's primary contribution: destination-bucketed spike-event
+communication (Extoll-style) as composable JAX modules.
+
+Layers (bottom-up):
+  events        packed 30-bit event wire format + packet cost model
+  routing       source LUT (addr -> dest, GUID) and GUID -> multicast mask
+  bucket        faithful cycle-level bucket state machine (the oracle)
+  aggregator    vectorized window aggregation (TPU path; Pallas option)
+  flow_control  credit-based ring buffer (host<->device discipline)
+  torus         3D-torus topology / link-load analysis
+  exchange      shard_map all_to_all spike fabric tying it all together
+"""
+from repro.core import (  # noqa: F401
+    aggregator,
+    bucket,
+    events,
+    flow_control,
+    routing,
+    torus,
+)

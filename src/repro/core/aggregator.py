@@ -1,0 +1,183 @@
+"""Vectorized window aggregation — the TPU-native form of the paper's buckets.
+
+An FPGA pipelines one event per clock through the renaming logic; a TPU is a
+throughput machine, so we aggregate a *window* of events at once: all events
+produced during one flush window (whose length is bounded by the minimum
+timestamp slack, i.e. the paper's deadline-flush condition) are binned by
+network destination into fixed-capacity buckets, which then feed a single
+``all_to_all``.  This is the same capacity-bounded binning MoE dispatch
+uses, and `repro.models.moe` reuses exactly this code with experts as
+destinations.
+
+Two implementations with identical semantics (checked against each other and
+against the cycle model in tests):
+
+* ``aggregate_onehot`` — O(N·D) one-hot cumsum; tiny and fusion-friendly,
+  best when D (destinations visible to one shard) is small.
+* ``aggregate_sort``   — O(N log N) stable sort by destination; best when D
+  is large or N >> D.
+
+Plus a Pallas kernel path in ``repro.kernels.bucket_scatter`` selected via
+``aggregate(..., impl="pallas")``.
+
+Semantics: events are processed in window order; for each destination the
+first ``capacity`` events are placed at slots 0..k-1 of its bucket, events
+beyond capacity are *overflow* (counted; the caller either sizes capacity
+for zero overflow or re-offers them next window — both modes are used, see
+``repro.core.exchange``).  Invalid events (valid bit clear or dest < 0) are
+ignored.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+
+
+class Buckets(NamedTuple):
+    """Result of one aggregation window.
+
+    data:     (D, C) uint32 packed events (slot j < counts[d] is valid)
+    guids:    (D, C) int32 GUIDs travelling with the events (or zeros)
+    counts:   (D,)   int32 events accepted per destination
+    overflow: ()     int32 events dropped because a bucket was full
+    """
+
+    data: jax.Array
+    guids: jax.Array
+    counts: jax.Array
+    overflow: jax.Array
+
+
+def _positions_onehot(dest: jax.Array, valid: jax.Array, n_dest: int):
+    """Slot index of each event within its destination bucket (window order)."""
+    oh = jax.nn.one_hot(jnp.where(valid, dest, n_dest), n_dest + 1,
+                        dtype=jnp.int32)[:, :n_dest]          # (N, D)
+    pos = jnp.cumsum(oh, axis=0) - oh                          # exclusive
+    return jnp.sum(pos * oh, axis=1), jnp.sum(oh, axis=0)      # (N,), (D,)
+
+
+def aggregate_onehot(words: jax.Array, dest: jax.Array, guids: jax.Array,
+                     n_dest: int, capacity: int) -> Buckets:
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    pos, counts = _positions_onehot(dest, valid, n_dest)
+    keep = valid & (pos < capacity)
+    # out-of-range destination index + mode="drop" discards rejected events
+    data = jnp.zeros((n_dest, capacity), jnp.uint32).at[
+        jnp.where(keep, dest, n_dest), jnp.where(keep, pos, 0)
+    ].set(words, mode="drop")
+    gui = jnp.zeros((n_dest, capacity), jnp.int32).at[
+        jnp.where(keep, dest, n_dest), jnp.where(keep, pos, 0)
+    ].set(guids, mode="drop")
+    accepted = jnp.minimum(counts, capacity)
+    overflow = jnp.sum(counts - accepted).astype(jnp.int32)
+    return Buckets(data, gui, accepted, overflow)
+
+
+def aggregate_sort(words: jax.Array, dest: jax.Array, guids: jax.Array,
+                   n_dest: int, capacity: int) -> Buckets:
+    n = words.shape[0]
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    key = jnp.where(valid, dest, n_dest)                      # invalid last
+    order = jnp.argsort(key, stable=True)
+    skey = key[order]
+    swords = words[order]
+    sguids = guids[order]
+    # slot within group: index - index-of-first-with-same-key
+    idx = jnp.arange(n)
+    first = jnp.searchsorted(skey, skey, side="left")
+    pos = idx - first
+    counts = jnp.bincount(jnp.where(valid, dest, 0),
+                          weights=valid.astype(jnp.int32),
+                          length=n_dest).astype(jnp.int32)
+    keep = (skey < n_dest) & (pos < capacity)
+    data = jnp.zeros((n_dest, capacity), jnp.uint32).at[
+        jnp.where(keep, skey, n_dest), jnp.where(keep, pos, 0)
+    ].set(swords, mode="drop")
+    gui = jnp.zeros((n_dest, capacity), jnp.int32).at[
+        jnp.where(keep, skey, n_dest), jnp.where(keep, pos, 0)
+    ].set(sguids, mode="drop")
+    accepted = jnp.minimum(counts, capacity)
+    overflow = jnp.sum(counts - accepted).astype(jnp.int32)
+    return Buckets(data, gui, accepted, overflow)
+
+
+def aggregate(words: jax.Array, dest: jax.Array, guids: jax.Array | None,
+              n_dest: int, capacity: int, impl: str = "auto") -> Buckets:
+    """Bin a window of events into per-destination buckets.
+
+    impl: "onehot" | "sort" | "pallas" | "auto" (sort if n_dest > 128).
+    """
+    if guids is None:
+        guids = jnp.zeros_like(words, dtype=jnp.int32)
+    dest = dest.astype(jnp.int32)
+    if impl == "auto":
+        impl = "sort" if n_dest > 128 else "onehot"
+    if impl == "onehot":
+        return aggregate_onehot(words, dest, guids, n_dest, capacity)
+    if impl == "sort":
+        return aggregate_sort(words, dest, guids, n_dest, capacity)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.bucket_scatter(words, dest, guids, n_dest, capacity)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def overflow_mask(words: jax.Array, dest: jax.Array, n_dest: int,
+                  capacity: int) -> jax.Array:
+    """True for events NOT accepted this window (bucket already full).
+
+    Callers re-offer these next window (the FPGA's back-pressure on the
+    HICANN links); with the cycle model this yields exact conservation.
+    """
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    pos, _ = _positions_onehot(dest.astype(jnp.int32), valid, n_dest)
+    return valid & (pos >= capacity)
+
+
+# ---------------------------------------------------------------------------
+# Wire-cost model for a flush window (used by benchmarks / roofline).
+# ---------------------------------------------------------------------------
+
+class WindowCost(NamedTuple):
+    packets: jax.Array      # () i32 packets emitted
+    bytes: jax.Array        # () i32 wire bytes (headers + padded payload)
+    cycles: jax.Array       # () i32 serial port cycles to drain the window
+    efficiency: jax.Array   # () f32 useful payload fraction
+
+
+def window_cost(counts: jax.Array,
+                max_events_per_packet: int = ev.PACKET_MAX_EVENTS) -> WindowCost:
+    """Cost of flushing buckets with ``counts`` events to the wire.
+
+    A destination with more than 124 accepted events emits multiple packets
+    (ceil(count/124)); each packet pays the header.
+    """
+    c = counts.astype(jnp.int32)
+    full = c // max_events_per_packet
+    rem = c % max_events_per_packet
+    packets = full + (rem > 0)
+    bytes_full = full * ev.packet_bytes(max_events_per_packet)
+    bytes_rem = jnp.where(rem > 0, ev.packet_bytes(rem), 0)
+    total_bytes = jnp.sum(bytes_full + bytes_rem)
+    cycles = (total_bytes + ev.DATAPATH_BYTES_PER_CYCLE - 1) // ev.DATAPATH_BYTES_PER_CYCLE
+    useful = jnp.sum(c) * ev.EVENT_BYTES
+    effic = jnp.where(total_bytes > 0, useful / jnp.maximum(total_bytes, 1), 0.0)
+    return WindowCost(jnp.sum(packets).astype(jnp.int32),
+                      total_bytes.astype(jnp.int32),
+                      cycles.astype(jnp.int32),
+                      effic.astype(jnp.float32))
+
+
+def unaggregated_cost(n_events: jax.Array) -> WindowCost:
+    """Cost of the no-aggregation baseline: one packet per event."""
+    n = jnp.asarray(n_events, jnp.int32)
+    per = ev.packet_bytes(1)
+    total_bytes = n * per
+    cycles = n * ev.wire_cycles(1)
+    eff = jnp.where(n > 0, (n * ev.EVENT_BYTES) / jnp.maximum(total_bytes, 1), 0.0)
+    return WindowCost(n, total_bytes, cycles.astype(jnp.int32),
+                      eff.astype(jnp.float32))

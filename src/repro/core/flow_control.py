@@ -1,0 +1,115 @@
+"""Credit-based ring-buffer flow control (paper §2.1).
+
+FPGAs write result data into a pre-registered ring buffer in host memory via
+RMA put; no per-message handshake is needed because the producer tracks the
+free space itself through a *space register* that is replenished by
+*notifications* from the consumer ("FPGAs exchange notifications with the
+software, informing each other about the amount of data written to or
+processed from memory. This implements a kind of credit based flow
+control.").
+
+This module models that discipline functionally:
+
+* ``RingState`` — write pointer, read pointer, producer-visible credits and
+  a notification-delay line (credits spent by the consumer only become
+  visible to the producer ``notify_latency`` steps later, which is what
+  makes the buffer-sizing trade-off real: sustained throughput =
+  min(produce_rate, consume_rate, size / notify_latency)).
+* ``producer_step`` / ``consumer_step`` — one step of each side.
+* ``run`` — closed-loop scan for benchmarks.
+
+The same discipline is used at two places in the framework: the host→device
+data-pipeline prefetch (``repro.data.pipeline``) and the serving engine's
+response ring (``repro.serve.engine``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RingConfig(NamedTuple):
+    size: int = 64              # ring slots
+    notify_latency: int = 8     # steps before consumed slots return as credit
+    notify_batch: int = 1       # consumer notifies every k processed slots
+
+
+class RingState(NamedTuple):
+    wr: jax.Array              # () i32 producer write pointer (monotonic)
+    rd: jax.Array              # () i32 consumer read pointer (monotonic)
+    credits: jax.Array         # () i32 slots the producer may still write
+    pending: jax.Array         # (L,) i32 credit notifications in flight
+    unnotified: jax.Array      # () i32 consumed but not yet notified slots
+    data: jax.Array            # (size,) payload (slot contents)
+
+
+def init_ring(cfg: RingConfig, dtype=jnp.uint32) -> RingState:
+    return RingState(
+        wr=jnp.int32(0), rd=jnp.int32(0),
+        credits=jnp.int32(cfg.size),
+        pending=jnp.zeros((cfg.notify_latency,), jnp.int32),
+        unnotified=jnp.int32(0),
+        data=jnp.zeros((cfg.size,), dtype),
+    )
+
+
+def producer_step(state: RingState, want: jax.Array, payload: jax.Array,
+                  cfg: RingConfig):
+    """Try to write ``want`` (0/1 here; slot-granular) items.
+
+    Returns (state, written:int32). Writes stall when credits == 0 — the
+    producer never overruns the consumer (the paper's correctness property).
+    """
+    can = jnp.minimum(want.astype(jnp.int32), state.credits)
+    slot = state.wr % cfg.size
+    data = jnp.where(can > 0, state.data.at[slot].set(payload), state.data)
+    return state._replace(
+        wr=state.wr + can, credits=state.credits - can, data=data
+    ), can
+
+
+def consumer_step(state: RingState, rate: jax.Array, cfg: RingConfig):
+    """Consume up to ``rate`` available items; emit batched notifications.
+
+    Returns (state, consumed:int32).
+    """
+    avail = state.wr - state.rd
+    take = jnp.minimum(rate.astype(jnp.int32), avail)
+    unnot = state.unnotified + take
+    notify = (unnot // cfg.notify_batch) * cfg.notify_batch
+    unnot = unnot - notify
+    # enqueue the notification at the tail of the delay line
+    pending = state.pending.at[-1].add(notify)
+    return state._replace(rd=state.rd + take, unnotified=unnot,
+                          pending=pending), take
+
+
+def tick(state: RingState) -> RingState:
+    """Advance the notification delay line one step; deliver head credits."""
+    arrived = state.pending[0]
+    pending = jnp.roll(state.pending, -1, 0).at[-1].set(0)
+    return state._replace(credits=state.credits + arrived, pending=pending)
+
+
+class RunStats(NamedTuple):
+    produced: jax.Array
+    consumed: jax.Array
+    stalls: jax.Array          # producer steps blocked on credits
+
+
+def run(cfg: RingConfig, steps: int, produce_rate: float = 1.0,
+        consume_rate: int = 1, seed: int = 0):
+    """Closed-loop simulation: Bernoulli producer vs fixed-rate consumer."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), steps)
+
+    def step(state, key):
+        want = (jax.random.uniform(key) < produce_rate).astype(jnp.int32)
+        state, wrote = producer_step(state, want, jnp.uint32(1), cfg)
+        state, took = consumer_step(state, jnp.int32(consume_rate), cfg)
+        state = tick(state)
+        return state, RunStats(wrote, took, (want - wrote))
+
+    state, stats = jax.lax.scan(step, init_ring(cfg), keys)
+    return state, RunStats(*(jnp.sum(x) for x in stats))

@@ -1,0 +1,146 @@
+"""3D-torus topology model (paper §1).
+
+Extoll Tourmalet nodes are "usually connected in a 3D-Torus topology, which
+offers good scaling characteristics"; routing is dimension-ordered on a
+16-bit destination address.  The BrainScaleS arrangement gathers 6 FPGAs at
+each of 8 concentrator nodes per wafer module (48 FPGAs/wafer), and the
+concentrators are torus nodes.
+
+This module provides the host-side analysis used by the benchmarks and the
+dry-run reports: address<->coordinate mapping, dimension-ordered route
+enumeration, per-link load for a traffic matrix, hop statistics and
+bisection capacity.  It is also the bridge to the TPU analogy: a TPU pod's
+ICI *is* a 3D torus, so `launch/mesh.py` maps the (data, model) mesh onto
+the same coordinates and the collective-bytes term of the roofline is
+divided by the same per-link bandwidth this model reasons about.
+
+numpy (host) — this is analysis code, not a jitted path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+# paper constants
+FPGAS_PER_WAFER = 48
+CONCENTRATORS_PER_WAFER = 8
+FPGAS_PER_CONCENTRATOR = 6
+HICANNS_PER_FPGA = 8
+LANES_PER_LINK = 12
+GBIT_PER_LANE = 8.4
+LINK_GBYTES = LANES_PER_LINK * GBIT_PER_LANE / 8.0   # 12.6 GB/s per link
+LINKS_PER_NODE = 7                                    # Tourmalet: 7 links
+
+
+@dataclasses.dataclass(frozen=True)
+class Torus:
+    """A (nx, ny, nz) 3D torus of Extoll nodes."""
+
+    nx: int
+    ny: int
+    nz: int
+
+    @property
+    def n_nodes(self) -> int:
+        return self.nx * self.ny * self.nz
+
+    def coords(self, node: np.ndarray | int):
+        node = np.asarray(node)
+        x = node % self.nx
+        y = (node // self.nx) % self.ny
+        z = node // (self.nx * self.ny)
+        return x, y, z
+
+    def node_id(self, x, y, z) -> np.ndarray:
+        return (np.asarray(z) * self.ny + np.asarray(y)) * self.nx + np.asarray(x)
+
+    # -- dimension-ordered routing ---------------------------------------
+    def _axis_steps(self, a: int, b: int, n: int):
+        """Shortest signed ring walk a->b on an n-ring; returns list of nodes."""
+        fwd = (b - a) % n
+        bwd = (a - b) % n
+        step = 1 if fwd <= bwd else -1
+        dist = min(fwd, bwd)
+        return [(a + step * i) % n for i in range(1, dist + 1)]
+
+    def route(self, src: int, dst: int):
+        """Dimension-ordered (X then Y then Z) route; list of node ids."""
+        sx, sy, sz = (int(v) for v in self.coords(src))
+        dx, dy, dz = (int(v) for v in self.coords(dst))
+        path = [src]
+        for x in self._axis_steps(sx, dx, self.nx):
+            path.append(int(self.node_id(x, sy, sz)))
+        for y in self._axis_steps(sy, dy, self.ny):
+            path.append(int(self.node_id(dx, y, sz)))
+        for z in self._axis_steps(sz, dz, self.nz):
+            path.append(int(self.node_id(dx, dy, z)))
+        return path
+
+    def hops(self, src, dst) -> np.ndarray:
+        """Vectorized hop count (sum of shortest ring distances per axis)."""
+        sx, sy, sz = self.coords(np.asarray(src))
+        dx, dy, dz = self.coords(np.asarray(dst))
+
+        def ring(a, b, n):
+            f = (b - a) % n
+            return np.minimum(f, n - f)
+
+        return ring(sx, dx, self.nx) + ring(sy, dy, self.ny) + ring(sz, dz, self.nz)
+
+    def mean_hops(self) -> float:
+        ids = np.arange(self.n_nodes)
+        s, d = np.meshgrid(ids, ids, indexing="ij")
+        return float(self.hops(s.ravel(), d.ravel()).mean())
+
+    # -- link loads -------------------------------------------------------
+    def link_loads(self, traffic: np.ndarray) -> dict:
+        """Route a (n_nodes, n_nodes) byte traffic matrix; per-link loads.
+
+        Returns {(u, v): bytes} for every directed link used.  Routing is
+        dimension-ordered, so this reproduces the congestion an Extoll
+        network would actually see (no adaptive routing modelled).
+        """
+        loads: dict = {}
+        n = self.n_nodes
+        for s, d in itertools.product(range(n), range(n)):
+            b = float(traffic[s, d])
+            if b <= 0 or s == d:
+                continue
+            path = self.route(s, d)
+            for u, v in zip(path[:-1], path[1:]):
+                loads[(u, v)] = loads.get((u, v), 0.0) + b
+        return loads
+
+    def max_link_load(self, traffic: np.ndarray) -> float:
+        loads = self.link_loads(traffic)
+        return max(loads.values()) if loads else 0.0
+
+    def bisection_links(self) -> int:
+        """Directed links crossing the X mid-plane bisection (torus: 2 per
+        ring crossing x2 wrap)."""
+        return 2 * 2 * self.ny * self.nz
+
+    def bisection_gbytes(self) -> float:
+        return self.bisection_links() * LINK_GBYTES
+
+
+def wafer_topology(n_wafers: int) -> Torus:
+    """The paper's arrangement: 8 concentrator torus-nodes per wafer.
+
+    We lay wafers along Z with each wafer's 8 concentrators forming a 2x4
+    XY-face, matching Figure 1's intent of keeping intra-wafer traffic on
+    short rings.
+    """
+    return Torus(nx=2, ny=4, nz=max(n_wafers, 1))
+
+
+def microcircuit_traffic(n_nodes: int, events_per_s: float,
+                         locality: float = 0.7) -> np.ndarray:
+    """Synthetic traffic matrix: `locality` fraction stays on-node-group,
+    rest uniform — roughly the Potjans-Diesmann connectivity footprint."""
+    m = np.full((n_nodes, n_nodes), (1 - locality) / max(n_nodes - 1, 1))
+    np.fill_diagonal(m, 0.0)
+    m = m / max(m.sum(), 1e-9) * events_per_s * 4.0   # 4 B/event payload
+    return m

@@ -1,0 +1,2 @@
+"""Data: synthetic LM pipeline + ring-buffer prefetch (paper §2.1)."""
+from repro.data import pipeline  # noqa: F401

@@ -1,0 +1,2 @@
+"""Distribution: sharding rules, explicit collectives, compression."""
+from repro.distributed import collectives, compression, sharding  # noqa: F401

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spots:
+bucket_scatter (event aggregation §3.1) and lif_step (workload inner loop).
+Each has a pure-jnp oracle in ref.py; validated in interpret mode on CPU."""
+from repro.kernels import ops, ref  # noqa: F401

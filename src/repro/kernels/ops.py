@@ -1,0 +1,59 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only (the
+kernels TARGET TPU; interpret mode executes the kernel body in Python for
+correctness validation).  On real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import events as ev
+from repro.core.aggregator import Buckets
+from repro.kernels.bucket_scatter import bucket_scatter_pallas
+from repro.kernels.lif_step import lif_step_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def bucket_scatter(words, dests, guids, n_dest: int, capacity: int) -> Buckets:
+    """Drop-in for ``core.aggregator.aggregate`` (impl='pallas')."""
+    valid = ev.is_valid(words) & (dests >= 0) & (dests < n_dest)
+    dests_m = jnp.where(valid, dests, -1).astype(jnp.int32)
+    data, gout, raw = bucket_scatter_pallas(
+        words, dests_m, guids, n_dest, capacity, interpret=INTERPRET)
+    accepted = jnp.minimum(raw, capacity)
+    overflow = jnp.sum(raw - accepted).astype(jnp.int32)
+    return Buckets(data, gout, accepted, overflow)
+
+
+@jax.jit
+def ssd_chunk(x, dt, A, B, C, s_prev):
+    """One Mamba-2 SSD chunk via the Pallas kernel (f32 outputs)."""
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+    return ssd_chunk_pallas(x, dt, A, B, C, s_prev, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def lif_step(state, params, exc_in, inh_in, i_ext=0.0):
+    """Fused LIF step; pads N to the tile size and unpads the result."""
+    from repro.snn.lif import LIFState
+    n = state.v.shape[0]
+    from repro.kernels.lif_step import N_TILE
+    pad = (-n) % N_TILE
+    if pad:
+        pz = lambda t, c=0: jnp.pad(t, (0, pad), constant_values=c)
+        state = LIFState(pz(state.v), pz(state.i_exc), pz(state.i_inh),
+                         pz(state.refrac, 1))
+        exc_in, inh_in = pz(exc_in), pz(inh_in)
+    st, spk = lif_step_pallas(state, params, exc_in, inh_in, i_ext,
+                              interpret=INTERPRET)
+    if pad:
+        st = LIFState(st.v[:n], st.i_exc[:n], st.i_inh[:n], st.refrac[:n])
+        spk = spk[:n]
+    return st, spk

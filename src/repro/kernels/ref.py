@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are small, obviously-correct implementations used by the kernel
+tests' ``assert_allclose`` sweeps — independent from the optimized
+``core.aggregator`` paths, which are themselves tested against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.snn.lif import LIFParams, LIFState
+from repro.snn import lif as lif_mod
+
+
+def bucket_scatter_ref(words, dests, guids, n_dest: int, capacity: int):
+    """O(N * D * C) reference binning, window order, capacity-clipped.
+
+    Returns (data (D, C) u32, guids (D, C) i32, raw_counts (D,) i32).
+    """
+    n = words.shape[0]
+    d_ids = jnp.arange(n_dest)
+    mask = dests[None, :] == d_ids[:, None]                 # (D, N)
+    mask_i = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask_i, axis=1) - mask_i               # exclusive
+    onehot = mask[:, :, None] & (pos[:, :, None]
+                                 == jnp.arange(capacity)[None, None, :])
+    data = jnp.sum(jnp.where(onehot, words.astype(jnp.int32)[None, :, None],
+                             0), axis=1).astype(jnp.uint32)
+    gout = jnp.sum(jnp.where(onehot, guids[None, :, None], 0), axis=1)
+    counts = jnp.sum(mask_i, axis=1)
+    return data, gout.astype(jnp.int32), counts
+
+
+def lif_step_ref(state: LIFState, p: LIFParams, exc_in, inh_in, i_ext):
+    """The SNN substrate's own step function is the oracle."""
+    st, spk = lif_mod.step(state, p, exc_in, inh_in, i_ext)
+    return st, spk.astype(jnp.int32)
+
+
+def ssd_chunk_ref(x, dt, A, B, C, s_prev):
+    """Pure-jnp oracle for one SSD chunk (all (batch,head) pairs).
+
+    Same math as models/ssm.ssd_chunked's chunk_step, flattened to (BH,).
+    """
+    da = dt * A[:, None]                                  # (BH, c)
+    cum = jnp.cumsum(da, axis=1)
+    seg = cum[:, -1]
+    c_len = x.shape[1]
+    causal = jnp.tril(jnp.ones((c_len, c_len), bool))
+    diff = cum[:, :, None] - cum[:, None, :]
+    decay = jnp.where(causal[None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("gin,gjn->gij", C, B)
+    y = jnp.einsum("gij,gij,gj,gjp->gip", scores, decay, dt, x)
+    y += jnp.einsum("gin,gpn,gi->gip", C, s_prev, jnp.exp(cum))
+    w = jnp.exp(seg[:, None] - cum) * dt
+    s_loc = jnp.einsum("gjp,gjn,gj->gpn", x, B, w)
+    s_new = s_prev * jnp.exp(seg)[:, None, None] + s_loc
+    return y, s_new

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: one Mamba-2 SSD chunk step (the ssm-family hot spot).
+
+Per (batch, head) the chunk step is three small matmuls plus elementwise
+decay math on (c x c) tiles — ideal MXU shape when c = 128/256:
+
+    scores = C · Bᵀ                     (c, N) x (N, c) -> (c, c)
+    y      = (scores ⊙ decay ⊙ dt) · x  (c, c) x (c, P) -> (c, P)
+    y     += (C ⊙ exp(cum)) · S_prev    (c, N) x (N, P) -> (c, P)
+    S_new  = exp(seg) · S_prev + (w ⊙ B)ᵀ · x   (N, c) x (c, P) -> (N, P)
+
+Grid: (batch x heads,); every program owns one (b, h) pair with all chunk
+tiles resident in VMEM — for c=256, N=128, P=64 the working set is
+(c·P + 2·c·N + c + 2·N·P) · 4 B ≈ 0.7 MiB, far under budget, and all three
+matmuls hit the 128-aligned MXU path.
+
+The inter-chunk recurrence stays a ``lax.scan`` in JAX (`models/ssm.py`);
+this kernel is its body.  Oracle: ``ref.ssd_chunk_ref`` (== the pure-jnp
+math in ``models/ssm.ssd_chunked``), validated over shape sweeps in
+interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, sprev_ref,
+            y_ref, snew_ref):
+    x = x_ref[0].astype(jnp.float32)          # (c, P)
+    dt = dt_ref[0].astype(jnp.float32)        # (c,)
+    a = a_ref[0, 0]                           # () decay rate (negative)
+    B = b_ref[0].astype(jnp.float32)          # (c, N)
+    C = c_ref[0].astype(jnp.float32)          # (c, N)
+    S = sprev_ref[0].astype(jnp.float32)      # (P, N)
+
+    da = dt * a                               # (c,)
+    cum = jnp.cumsum(da)                      # within-chunk log-decay
+    seg = cum[-1]
+    c_len = x.shape[0]
+
+    # intra-chunk: scores (c,c) on the MXU, causal decay mask elementwise
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)
+    diff = cum[:, None] - cum[None, :]
+    causal = jax.lax.iota(jnp.int32, c_len)[:, None] >= \
+        jax.lax.iota(jnp.int32, c_len)[None, :]
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)
+    y = jnp.dot(scores * decay * dt[None, :], x,
+                preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    y += jnp.dot(C * jnp.exp(cum)[:, None], S.T,
+                 preferred_element_type=jnp.float32)
+
+    # state update
+    w = jnp.exp(seg - cum) * dt               # (c,)
+    s_loc = jnp.dot(x.T, B * w[:, None],
+                    preferred_element_type=jnp.float32)   # (P, N)
+    snew_ref[0] = S * jnp.exp(seg) + s_loc
+    y_ref[0] = y
+
+
+def ssd_chunk_pallas(x, dt, A, B, C, s_prev, interpret: bool = True):
+    """One chunk for all (batch, head) pairs.
+
+    x: (BH, c, P); dt: (BH, c); A: (BH,) negative rates;
+    B, C: (BH, c, N); s_prev: (BH, P, N).
+    Returns (y (BH, c, P) f32, s_new (BH, P, N) f32).
+    """
+    BH, c, P = x.shape
+    N = B.shape[2]
+    grid = (BH,)
+    blk = lambda *shape: pl.BlockSpec((1,) + shape, lambda i: (i,) + (0,) * len(shape))
+    out_shapes = (
+        jax.ShapeDtypeStruct((BH, c, P), jnp.float32),
+        jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+    )
+    fn = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            blk(c, P),
+            blk(c),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            blk(c, N),
+            blk(c, N),
+            blk(P, N),
+        ],
+        out_specs=(blk(c, P), blk(P, N)),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )
+    return fn(x, dt, A.reshape(BH, 1), B, C, s_prev)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, roofline, train/serve CLIs.
+NOTE: dryrun must be run as its own process (it forces 512 host devices)."""

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) cell and both production meshes
+(single-pod 16x16 and multi-pod 2x16x16 = 512 chips), this driver:
+
+  1. builds the jitted step (train_step / prefill / serve_step) with the
+     full-size config — inputs are ``jax.ShapeDtypeStruct`` stand-ins, so
+     nothing is allocated,
+  2. ``.lower(...).compile()`` — any sharding mismatch, non-divisible
+     partition, unsupported collective or compile-time OOM fails the cell,
+  3. records ``memory_analysis()`` (fits-in-HBM proof), ``cost_analysis()``
+     and the parsed collective schedule into a JSON report consumed by
+     EXPERIMENTS.md §Dry-run / §Roofline and the perf loop.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_32b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out report.json]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch import roofline as rf
+from repro.models.model import build
+from repro.models.modules import param_bytes
+from repro.models.transformer import Runtime
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+HBM_PER_CHIP = 16 * 1024 ** 3          # TPU v5e
+
+
+# ---------------------------------------------------------------------------
+# per-arch training policy (what a job config would set)
+# ---------------------------------------------------------------------------
+
+def train_policy(cfg: ModelConfig):
+    if cfg.name == "arctic-480b":
+        # 468B params: f32 Adam moments can't fit one pod -> Adafactor,
+        # bf16 params + bf16 momentum (documented in DESIGN.md §4).
+        ocfg = opt_lib.OptimizerConfig(kind="adafactor",
+                                       momentum_dtype="bfloat16")
+        return step_lib.TrainConfig(optimizer=ocfg), jnp.bfloat16
+    return step_lib.TrainConfig(), jnp.float32
+
+
+def make_runtime(mesh, *, train: bool, moe_impl: str = "local",
+                 seq_axis=None, split_kv: bool = False) -> Runtime:
+    return Runtime(
+        mesh=mesh,
+        batch_axes=batch_axes(mesh),
+        moe_impl=moe_impl,
+        remat=train,
+        seq_axis=("model" if train else None) if seq_axis is None else seq_axis,
+        split_kv_axis="model" if split_kv else None,
+        attn_chunk=1024,
+        logits_chunk=512,
+    )
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins; never allocated)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model inputs for one cell (tokens/labels + modality stubs)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        batch = {"tokens": _sds((B, 1), jnp.int32)}
+    else:
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((B, S), jnp.int32)
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["positions3"] = _sds((3, B, S), jnp.int32)
+        batch["vision_embeds"] = _sds((B, cfg.vision_tokens, cfg.d_model),
+                                      jnp.bfloat16)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["enc_frames"] = _sds((B, cfg.enc_ctx, cfg.d_model),
+                                   jnp.bfloat16)
+    return batch
+
+
+_BATCH_AXES_MAP = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "positions3": (None, "batch", "seq"),
+    "vision_embeds": ("batch", None, "embed"),
+    "enc_frames": ("batch", None, None),
+}
+
+
+def batch_shardings(batch, mesh):
+    out = {}
+    for k, v in batch.items():
+        axes = _BATCH_AXES_MAP[k]
+        out[k] = shd.array_sharding(axes[: len(v.shape)], v.shape, mesh)
+    return out
+
+
+def cache_shardings(caches_abs, mesh):
+    """Heuristic logical axes for cache arrays by position/name."""
+    def one(path, v):
+        nd = len(v.shape)
+        if nd == 0 or v.shape == ():
+            return NamedSharding(mesh, P())
+        # stacked (L, B, T, H, D) / (L, B, H, P, N) / (L, B, K, W) etc:
+        axes = [None] * nd
+        axes[0] = "layers"
+        if nd >= 2:
+            axes[1] = "batch"
+        if nd == 5:
+            axes[2], axes[3], axes[4] = "seq", "kv_heads", "head_dim"
+        elif nd == 4:
+            axes[2], axes[3] = None, "mlp"
+        elif nd == 3:
+            axes[2] = "mlp"
+        return shd.array_sharding(tuple(axes), v.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, v: one(p, v), caches_abs)
+
+
+# ---------------------------------------------------------------------------
+# cell builders: (fn, abstract args, in_shardings)
+# ---------------------------------------------------------------------------
+
+def build_train_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                     moe_impl: str = "local", seq_axis=None,
+                     grad_rs: bool = False):
+    model = build(cfg)
+    tcfg, pdtype = train_policy(cfg)
+    rt = make_runtime(mesh, train=True, moe_impl=moe_impl, seq_axis=seq_axis)
+    pspecs = shd.param_shardings(model.specs(), mesh)
+    if grad_rs:
+        import dataclasses as _dc
+        rt = _dc.replace(rt, grad_specs=pspecs)
+    train_step = step_lib.make_train_step(model, tcfg, rt)
+    state_abs = step_lib.abstract_train_state(model, tcfg, pdtype)
+    # moments / master share the param tree's shardings leaf-for-leaf
+    state_sh = {
+        "params": jax.tree_util.tree_map(
+            lambda s, _: s, pspecs, state_abs["params"]),
+        "opt": _opt_shardings(state_abs["opt"], pspecs, mesh),
+        "step": NamedSharding(mesh, P()),
+    }
+    batch = input_specs(cfg, shape)
+    bsh = batch_shardings(batch, mesh)
+    return (train_step, (state_abs, batch), (state_sh, bsh), model)
+
+
+def _opt_shardings(opt_abs, pspecs, mesh):
+    """Moments mirror params; factored stats replicate their reduced dim."""
+    rep = NamedSharding(mesh, P())
+
+    def walk(abs_node, spec_node):
+        if isinstance(abs_node, dict):
+            return {k: walk(abs_node[k], spec_node[k]) for k in abs_node}
+        if hasattr(abs_node, "shape"):
+            if (hasattr(spec_node, "spec")
+                    and len(abs_node.shape) == len(spec_node.spec)):
+                return spec_node
+            return rep
+        return rep
+
+    if hasattr(opt_abs, "_fields"):      # AdamWState / AdafactorState
+        reps = {}
+        for f in opt_abs._fields:
+            sub = getattr(opt_abs, f)
+            if f in ("m", "v") and isinstance(sub, dict):
+                reps[f] = walk(sub, pspecs)
+            elif isinstance(sub, dict):
+                reps[f] = jax.tree_util.tree_map(lambda _: rep, sub)
+            else:
+                reps[f] = rep
+        return type(opt_abs)(**reps)
+    return jax.tree_util.tree_map(lambda _: rep, opt_abs)
+
+
+def build_prefill_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       moe_impl: str = "local", rules=None):
+    model = build(cfg)
+    # prefill is long-sequence: sequence-parallel residual + (for MoE)
+    # seq-sharded bucket dispatch apply just as in training
+    rt = make_runtime(mesh, train=False, moe_impl=moe_impl,
+                      seq_axis="model")
+    pspecs = shd.param_shardings(model.specs(), mesh, rules)
+    params_abs = model.abstract(jnp.bfloat16)
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len))
+    csh = cache_shardings(caches_abs, mesh)
+    batch = input_specs(cfg, shape)
+    bsh = batch_shardings(batch, mesh)
+    fn = lambda p, b, c: model.prefill(p, b, c, rt)
+    return (fn, (params_abs, batch, caches_abs), (pspecs, bsh, csh), model)
+
+
+def build_decode_cell(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      moe_impl: str = "local", rules=None,
+                      split_kv: bool = False):
+    model = build(cfg)
+    rt = make_runtime(mesh, train=False, moe_impl=moe_impl,
+                      split_kv=split_kv)
+    pspecs = shd.param_shardings(model.specs(), mesh, rules)
+    params_abs = model.abstract(jnp.bfloat16)
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(shape.global_batch, shape.seq_len))
+    csh = cache_shardings(caches_abs, mesh)
+    tokens = _sds((shape.global_batch, 1), jnp.int32)
+    tsh = shd.array_sharding(("batch", None), tokens.shape, mesh)
+    fn = lambda p, c, t: model.decode(p, c, t, rt)
+    return (fn, (params_abs, caches_abs, tokens), (pspecs, csh, tsh), model)
+
+
+# ---------------------------------------------------------------------------
+
+def cell_skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("skip: pure full-attention arch at 524288-token KV — "
+                "quadratic-attention cell excluded per assignment; see "
+                "DESIGN.md §5")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             moe_impl: str = "local", seq_axis=None, verbose: bool = True,
+             serve_rules: bool = False, split_kv: bool = False,
+             grad_rs: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    skip = cell_skip_reason(cfg, shape)
+    report = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "moe_impl": moe_impl,
+    }
+    if skip:
+        report["status"] = "skipped"
+        report["reason"] = skip
+        return report
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    rules = shd.SERVE_RULES if serve_rules else None
+    # bucket EP dispatch applies to token-heavy shapes; decode payloads
+    # are tiny and the serve layout already avoids weight motion
+    if shape.kind == "decode" and moe_impl == "bucket":
+        moe_impl = "local"
+    if shape.kind == "train":
+        fn, args, shardings, model = build_train_cell(
+            cfg, shape, mesh, moe_impl, seq_axis, grad_rs=grad_rs)
+    elif shape.kind == "prefill":
+        fn, args, shardings, model = build_prefill_cell(
+            cfg, shape, mesh, moe_impl, rules)
+    else:
+        fn, args, shardings, model = build_decode_cell(
+            cfg, shape, mesh, moe_impl, rules, split_kv)
+
+    with jax.set_mesh(mesh):
+        # donate the mutable state: train state / KV caches update in place
+        donate = {"train": (0,), "prefill": (2,), "decode": (1,)}[shape.kind]
+        jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_d[k] = int(v)
+    # per-chip state bytes from the sharding plan (host-side truth)
+    args_bytes = shd.bytes_per_device(args, shardings)
+    terms, coll = rf.terms_from_compiled(compiled, cfg, shape, chips)
+    # analytic HBM floor: one pass over resident per-chip state
+    terms.hbm_bytes = max(terms.hbm_bytes, float(args_bytes))
+
+    report.update(
+        status="ok",
+        compile_s=round(time.time() - t0, 1),
+        chips=chips,
+        per_chip_state_bytes=int(args_bytes),
+        fits_hbm=bool(args_bytes < HBM_PER_CHIP),
+        memory_analysis=mem_d,
+        collectives=coll,
+        roofline=terms.to_dict(),
+    )
+    if verbose:
+        print(f"[{report['mesh']}] {arch} x {shape_name}: OK "
+              f"({report['compile_s']}s compile, "
+              f"{args_bytes / 1e9:.2f} GB/chip state, "
+              f"bottleneck={terms.bottleneck}, "
+              f"frac={terms.roofline_fraction:.3f})")
+        print("  memory_analysis:", mem_d)
+        print("  collective bytes:", coll["bytes_by_kind"])
+    del compiled, lowered, jitted
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--moe-impl", default="local")
+    ap.add_argument("--serve-rules", action="store_true",
+                    help="resident-weight inference sharding (hillclimb 1)")
+    ap.add_argument("--split-kv", action="store_true",
+                    help="flash-decoding over seq-sharded cache (hillclimb)")
+    ap.add_argument("--grad-rs", action="store_true",
+                    help="constrain grads to param sharding (RS not AR)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_configs():
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    reports = []
+    for mp in meshes:
+        for a, s in cells:
+            try:
+                reports.append(run_cell(a, s, multi_pod=mp,
+                                        moe_impl=args.moe_impl,
+                                        serve_rules=args.serve_rules,
+                                        split_kv=args.split_kv,
+                                        grad_rs=args.grad_rs))
+            except Exception as e:                       # noqa: BLE001
+                traceback.print_exc()
+                reports.append({"arch": a, "shape": s,
+                                "mesh": "2x16x16" if mp else "16x16",
+                                "status": "error", "error": repr(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in reports)
+    sk = sum(r["status"] == "skipped" for r in reports)
+    err = sum(r["status"] == "error" for r in reports)
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {err} errors "
+          f"/ {len(reports)} cells")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+The physical analogy is direct: a TPU v5e pod's ICI is a torus exactly like
+the paper's Extoll fabric; ``("data", "model")`` maps DP/FSDP onto long
+torus dimensions and TP onto the short ones, and the ``pod`` axis is the
+inter-pod DCN — the BrainScaleS wafer-to-wafer hop (paper Fig. 1).
+
+NOTE: functions, not module constants — importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4, pods: int = 0):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    if pods:
+        return jax.make_mesh((pods, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md tables from dry-run report JSONs."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_table(reports):
+    hdr = ("| arch | shape | mesh | t_compute | t_memory | t_collective | "
+           "bottleneck | useful(6ND/HLO) | roofline frac | GB/chip |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in reports:
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"— | — | — | skipped¹ | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | | | | | | |")
+            continue
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(t['t_compute'])} | {fmt_s(t['t_memory'])} | "
+            f"{fmt_s(t['t_collective'])} | {t['bottleneck']} | "
+            f"{t['useful_ratio']:.2f} | {t['roofline_fraction']:.3f} | "
+            f"{r['per_chip_state_bytes'] / 1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(reports):
+    hdr = ("| arch | shape | mesh | compile | GB/chip state | fits HBM | "
+           "AG GB | AR GB | A2A GB | CP GB |")
+    sep = "|" + "---|" * 10
+    rows = [hdr, sep]
+    for r in reports:
+        if r["status"] != "ok":
+            continue
+        c = r["collectives"]["bytes_by_kind"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']}s | {r['per_chip_state_bytes'] / 1e9:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} | "
+            f"{c['all-gather'] / 1e9:.1f} | {c['all-reduce'] / 1e9:.1f} | "
+            f"{c['all-to-all'] / 1e9:.1f} | "
+            f"{c['collective-permute'] / 1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def main():
+    out = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            reports = json.load(f)
+        out.append(f"### {path}\n")
+        out.append(roofline_table(reports))
+        out.append("")
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model zoo: the 10 assigned architectures behind one interface."""
+from repro.models.model import Model, build  # noqa: F401

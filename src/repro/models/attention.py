@@ -1,0 +1,243 @@
+"""Attention: GQA/MQA/MHA with the zoo's variants, memory-bounded.
+
+Training/prefill attention is *flash-style*: an online-softmax ``lax.scan``
+over KV chunks, so the (S, S) score matrix is never materialized — at 32k
+prefill the naive scores would be tens of GB per device, so this is what
+makes the dry-run (and real hardware) fit.  Masking (causal + sliding
+window) is computed from absolute indices inside each chunk.
+
+GQA grouping is implemented by *expanding* K/V to the query-head count
+with a static gather (``head -> head // group``) rather than reshaping Q
+to (Hkv, G, D): a reshape would destroy the tensor-parallel head sharding
+(64 heads sharded 16-way cannot be viewed as (8, 8)), forcing GSPMD to
+replicate attention per chip — the gather keeps every einsum sharded on
+the head axis, and the expanded K/V only ever exists chunk-sized.
+
+Variants covered (per assigned architecture):
+  * grouped KV heads (GQA/MQA), qk-norm (qwen3), QKV bias (qwen1.5)
+  * attention logit softcap + query scale override (gemma2)
+  * sliding-window local attention (gemma2 alternating, recurrentgemma)
+  * decode with KV cache (+ ring cache for windowed layers)
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38     # flash-attention convention
+
+
+def _kv_head_map(hq: int, hkv: int):
+    """Static gather indices expanding kv heads to query heads."""
+    g = hq // hkv
+    return jnp.arange(hq) // g
+
+
+def _scores(q, k, scale, cap):
+    # q: (B, Sq, H, D) k: (B, Ck, H, D) -> (B, Sq, H, Ck), f32
+    s = jnp.einsum("bqhd,bkhd->bqhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    return s
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    q_offset=0, kv_len: jax.Array | None = None,
+                    chunk: int = 1024, gqa: str = "expand"):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D); Hq % Hkv == 0.
+    q_offset: absolute index of q[0] (prefill continuation / decode).
+    kv_len: optional () — valid KV prefix length (rest masked).
+
+    gqa:
+      "expand" — K/V expanded to Hq heads with a static gather.  Use when
+        Q is head-sharded (TP decode/prefill): the gather keeps every
+        einsum sharded on heads.
+      "group"  — Q viewed as (Hkv, G); K/V never expand, so the backward
+        dK/dV stays Hkv-sized (8x smaller on qwen3).  Use when Q's heads
+        are replicated per rank (context-parallel training), where the
+        (Hkv, G) reshape cannot break a head sharding.
+
+    Each chunk step is wrapped in ``jax.checkpoint``: the backward pass
+    recomputes the (.., chunk) probability block instead of storing one
+    per chunk — without this, training at 4k x 64 layers stores ~4 GB of
+    f32 p-matrices per layer and defeats the point of flash attention.
+    """
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = (1.0 / D ** 0.5) if scale is None else scale
+    chunk = min(chunk, Skv)
+    nc = -(-Skv // chunk)
+    pad = nc * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nc, chunk, Hkv, D)
+    vc = v.reshape(B, nc, chunk, Hkv, D)
+    q_idx = q_offset + jnp.arange(Sq)
+    if gqa == "group":
+        qg = q.reshape(B, Sq, Hkv, G, D)
+    else:
+        hmap = _kv_head_map(Hq, Hkv)
+
+    def mask_for(j):
+        kv_idx = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= q_idx[:, None] >= kv_idx[None, :]
+        if not (isinstance(window, int) and window == 0):
+            w = jnp.asarray(window)            # may be traced (per-layer)
+            mask &= (q_idx[:, None] - kv_idx[None, :] < w) | (w <= 0)
+        mask &= (kv_idx < Skv)[None, :]
+        if kv_len is not None:
+            mask &= (kv_idx < kv_len)[None, :]
+        return mask
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        mask = mask_for(j)
+        if gqa == "group":
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        else:
+            kj = jnp.take(kj, hmap, axis=2)    # (B, C, Hq, D) chunk-sized
+            vj = jnp.take(vj, hmap, axis=2)
+            s = _scores(q, kj, scale, softcap)     # (B, Sq, Hq, C)
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    hshape = (B, Sq, Hkv, G) if gqa == "group" else (B, Sq, Hq)
+    m0 = jnp.full(hshape, NEG_INF, jnp.float32)
+    l0 = jnp.zeros(hshape, jnp.float32)
+    a0 = jnp.zeros(hshape + (D,), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nc)))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Decode path with KV cache
+# --------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, T, Hkv, D)  (T = window for local layers)
+    v: jax.Array          # (B, T, Hkv, D)
+    length: jax.Array     # () tokens already in cache
+
+
+def init_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, max_len, n_kv, head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_update(cache: KVCache, k_new, v_new, *, ring: bool = False) -> KVCache:
+    """Append S_new tokens. ring=True wraps (sliding-window layers)."""
+    T = cache.k.shape[1]
+    s = k_new.shape[1]
+    if ring:
+        if s >= T:
+            # long prefill: only the trailing window survives; slot of
+            # absolute position p is p % T, each slot written exactly once
+            k_new, v_new = k_new[:, -T:], v_new[:, -T:]
+            start = cache.length + s - T
+            s_eff = T
+        else:
+            start = cache.length
+            s_eff = s
+        idx = (start + jnp.arange(s_eff)) % T
+        k = cache.k.at[:, idx].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[:, idx].set(v_new.astype(cache.v.dtype))
+    else:
+        k = jax.lax.dynamic_update_slice(
+            cache.k, k_new.astype(cache.k.dtype), (0, cache.length, 0, 0))
+        v = jax.lax.dynamic_update_slice(
+            cache.v, v_new.astype(cache.v.dtype), (0, cache.length, 0, 0))
+    return KVCache(k, v, cache.length + s)
+
+
+def decode_attention(q, cache: KVCache, *, window: int = 0,
+                     softcap: float = 0.0, scale: float | None = None,
+                     ring: bool = False, chunk: int = 4096):
+    """Single-step attention against the cache, scanned over cache chunks
+    (bounds the expanded-KV working set at long context). q: (B,1,Hq,D)."""
+    B, _, Hq, D = q.shape
+    T, Hkv = cache.k.shape[1], cache.k.shape[2]
+    scale = (1.0 / D ** 0.5) if scale is None else scale
+    hmap = _kv_head_map(Hq, Hkv)
+    cur = cache.length          # index of the token being produced
+    pos = jnp.arange(T)
+    static_nowin = isinstance(window, int) and window == 0
+    if ring:
+        age = (cur - 1 - pos) % T
+        if static_nowin:
+            ok = age < jnp.minimum(cur, T)
+        else:
+            w = jnp.asarray(window)
+            ok = jnp.where(w > 0, age < w, age < jnp.minimum(cur, T))
+    else:
+        ok = pos < cur
+        if not static_nowin:
+            w = jnp.asarray(window)
+            ok &= (pos >= cur - w) | (w <= 0)
+
+    chunk = min(chunk, T)
+    nc = -(-T // chunk)
+    padT = nc * chunk - T
+    kc = jnp.pad(cache.k, ((0, 0), (0, padT), (0, 0), (0, 0)))
+    vc = jnp.pad(cache.v, ((0, 0), (0, padT), (0, 0), (0, 0)))
+    okc = jnp.pad(ok, (0, padT))
+    kc = jnp.moveaxis(kc.reshape(B, nc, chunk, Hkv, D), 1, 0)
+    vc = jnp.moveaxis(vc.reshape(B, nc, chunk, Hkv, D), 1, 0)
+    okc = okc.reshape(nc, 1, 1, chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kj, vj, okj = xs
+        kj = jnp.take(kj, hmap, axis=2)
+        vj = jnp.take(vj, hmap, axis=2)
+        s = _scores(q, kj, scale, softcap)[:, 0]          # (B, Hq, C)
+        s = jnp.where(okj, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhk,bkhd->bhd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kc, vc, okc))
+    out = acc / jnp.maximum(l[..., None], 1e-37)
+    return out[:, None].astype(q.dtype)

@@ -1,0 +1,271 @@
+"""Hybrid recurrent/attention models (RecurrentGemma-style, 2:1 pattern)
+and the pure-SSM Mamba-2 stack.
+
+RecurrentGemma's repeating pattern (rglru, rglru, local-attn) is scanned as
+*super-blocks* of three layers so every scan step has identical structure;
+a remainder of r = n_layers mod 3 leading recurrent layers is applied
+un-scanned.  Both families have O(1)-per-token decode state, so they are the
+two architectures that run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.modules import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# RecurrentGemma
+# ---------------------------------------------------------------------------
+
+def _rglru_specs(cfg: ModelConfig, n: int) -> dict:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    k = cfg.recurrent.conv_width
+    return {
+        "w_in": ParamSpec((n, d, w), ("layers", "embed", "mlp")),
+        "w_gate": ParamSpec((n, d, w), ("layers", "embed", "mlp")),
+        "w_out": ParamSpec((n, w, d), ("layers", "mlp", "embed")),
+        "conv_w": ParamSpec((n, k, w), ("layers", None, "mlp"), init="small"),
+        "conv_b": ParamSpec((n, w), ("layers", "mlp"), init="zeros"),
+        "w_a": ParamSpec((n, w, w), ("layers", "mlp", None), init="small"),
+        "b_a": ParamSpec((n, w), ("layers", "mlp"), init="zeros"),
+        "w_x": ParamSpec((n, w, w), ("layers", "mlp", None), init="small"),
+        "b_x": ParamSpec((n, w), ("layers", "mlp"), init="zeros"),
+        "lam": ParamSpec((n, w), ("layers", "mlp"), init="ones"),
+        "ln": ParamSpec((n, d), ("layers", "embed"), init="ones"),
+    }
+
+
+def _idx(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def rg_param_specs(cfg: ModelConfig) -> dict:
+    ns = cfg.n_layers // 3            # super-blocks (r, r, attn)
+    rem = cfg.n_layers % 3            # leading extra recurrent layers
+    specs = {
+        "embed": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                           init="embed"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), init="ones"),
+        "super": {
+            "r0": _rglru_specs(cfg, ns),
+            "r1": _rglru_specs(cfg, ns),
+            "attn": {**T._attn_specs(cfg, ns), **T._norm_specs(cfg, ns)},
+            "mlp0": T._mlp_specs(cfg, ns, cfg.d_ff),
+            "mlp1": T._mlp_specs(cfg, ns, cfg.d_ff),
+            "mlp2": T._mlp_specs(cfg, ns, cfg.d_ff),
+            "mln0": ParamSpec((ns, cfg.d_model), ("layers", "embed"), init="ones"),
+            "mln1": ParamSpec((ns, cfg.d_model), ("layers", "embed"), init="ones"),
+            "mln2": ParamSpec((ns, cfg.d_model), ("layers", "embed"), init="ones"),
+        },
+    }
+    if rem:
+        specs["tail"] = {
+            f"r{i}": _rglru_specs(cfg, 1) for i in range(rem)
+        }
+        specs["tail"].update({
+            f"mlp{i}": T._mlp_specs(cfg, 1, cfg.d_ff) for i in range(rem)
+        })
+        specs["tail"].update({
+            f"mln{i}": ParamSpec((1, cfg.d_model), ("layers", "embed"),
+                                 init="ones") for i in range(rem)
+        })
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab),
+                                     ("embed", "vocab"))
+    return specs
+
+
+class RGCaches(NamedTuple):
+    r0: R.RGLRUCache
+    r1: R.RGLRUCache
+    attn: A.KVCache
+    tail: tuple
+
+
+def _recurrent_residual(p, x, cfg, cache):
+    p = T.cast_params(p)
+    h = L.rms_norm(x, p["ln"], cfg.rms_eps)
+    o, cache = R.recurrent_block(p, h, cfg, cache)
+    return x + o, cache
+
+
+def _mlp_residual(p, ln, x, cfg, prefix=""):
+    p = T.cast_params(p)
+    h = L.rms_norm(x, ln, cfg.rms_eps)
+    return x + L.glu_mlp(h, p[prefix + "wg"].astype(h.dtype),
+                         p[prefix + "wu"].astype(h.dtype),
+                         p[prefix + "wd"].astype(h.dtype), cfg.act)
+
+
+def rg_forward(params, tokens, cfg: ModelConfig, rt: T.Runtime | None = None,
+               caches: RGCaches | None = None, positions=None):
+    """RecurrentGemma forward (train/prefill, or decode when S==1 with
+    caches). Returns (hidden, aux(=0), new_caches)."""
+    rt = rt or T.Runtime()
+    B, Sq = tokens.shape
+    if positions is None:
+        has_attn = caches is not None and caches.attn.length.shape[0] > 0
+        off = caches.attn.length[0] if has_attn else 0
+        positions = jnp.broadcast_to(off + jnp.arange(Sq), (B, Sq)).astype(jnp.int32)
+    x = T.embed_tokens(params, tokens, cfg, rt)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    win = cfg.sliding_window
+    rem = cfg.n_layers % 3
+
+    if caches is None:
+        # train / stateless prefill: windowed flash attention, no caches
+        def super_body(x, p):
+            x, _ = _recurrent_residual(p["r0"], x, cfg, None)
+            x = _mlp_residual(p["mlp0"], p["mln0"], x, cfg)
+            x, _ = _recurrent_residual(p["r1"], x, cfg, None)
+            x = _mlp_residual(p["mlp1"], p["mln1"], x, cfg)
+            x, _ = T.attn_block(p["attn"], x, cfg, rt, window=win,
+                                positions=positions)
+            x = _mlp_residual(p["mlp2"], p["mln2"], x, cfg)
+            return rt.wsc(x, rt.aspec()), None
+
+        x, _ = jax.lax.scan(super_body, x, params["super"])
+        if "tail" in params:
+            for i in range(rem):
+                p = params["tail"]
+                x, _ = _recurrent_residual(_idx(p[f"r{i}"], 0), x, cfg, None)
+                x = _mlp_residual(_idx(p[f"mlp{i}"], 0), p[f"mln{i}"][0], x, cfg)
+        x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return x, jnp.zeros((), jnp.float32), None
+
+    def super_body(carry, xs):
+        x = carry
+        p, (c_r0, c_r1, (ck, cv, clen)) = xs
+        kv = A.KVCache(ck, cv, clen)
+        x, c_r0 = _recurrent_residual(p["r0"], x, cfg, c_r0)
+        x = _mlp_residual(p["mlp0"], p["mln0"], x, cfg)
+        x, c_r1 = _recurrent_residual(p["r1"], x, cfg, c_r1)
+        x = _mlp_residual(p["mlp1"], p["mln1"], x, cfg)
+        x, kv = T.attn_block(p["attn"], x, cfg, rt, window=win,
+                             positions=positions, cache=kv, ring=True)
+        x = _mlp_residual(p["mlp2"], p["mln2"], x, cfg)
+        x = rt.wsc(x, rt.aspec())
+        return x, (c_r0, c_r1, (kv.k, kv.v, kv.length))
+
+    sup = (caches.r0, caches.r1,
+           (caches.attn.k, caches.attn.v, caches.attn.length))
+    x, (c0, c1, (ck, cv, cl)) = jax.lax.scan(super_body, x,
+                                             (params["super"], sup))
+    new_tail = []
+    if "tail" in params:
+        for i in range(len(caches.tail)):
+            p = params["tail"]
+            x, ci = _recurrent_residual(_idx(p[f"r{i}"], 0), x, cfg,
+                                        caches.tail[i])
+            x = _mlp_residual(_idx(p[f"mlp{i}"], 0), p[f"mln{i}"][0], x, cfg)
+            new_tail.append(ci)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    new = RGCaches(c0, c1, A.KVCache(ck, cv, cl), tuple(new_tail))
+    return x, jnp.zeros((), jnp.float32), new
+
+
+def rg_init_caches(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    ns = cfg.n_layers // 3
+    rem = cfg.n_layers % 3
+    w = cfg.recurrent.lru_width or cfg.d_model
+    k = cfg.recurrent.conv_width
+    win = cfg.sliding_window
+    mk_r = lambda: R.RGLRUCache(
+        conv=jnp.zeros((ns, batch, k - 1, w), dtype),
+        h=jnp.zeros((ns, batch, w), jnp.float32))
+    kv = A.KVCache(
+        k=jnp.zeros((ns, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((ns, batch, win, cfg.n_kv_heads, cfg.head_dim), dtype),
+        length=jnp.zeros((ns,), jnp.int32))
+    tail = tuple(
+        R.RGLRUCache(conv=jnp.zeros((batch, k - 1, w), dtype),
+                     h=jnp.zeros((batch, w), jnp.float32))
+        for _ in range(rem))
+    return RGCaches(mk_r(), mk_r(), kv, tail)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2
+# ---------------------------------------------------------------------------
+
+def mamba2_param_specs(cfg: ModelConfig) -> dict:
+    n = cfg.n_layers
+    d = cfg.d_model
+    d_inner, H, conv_dim = S.dims(cfg)
+    g, ns = cfg.ssm.n_groups, cfg.ssm.d_state
+    in_dim = 2 * d_inner + 2 * g * ns + H
+    specs = {
+        "embed": ParamSpec((cfg.vocab, d), ("vocab", "embed"), init="embed"),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+        "blocks": {
+            "in_proj": ParamSpec((n, d, in_dim), ("layers", "embed", "mlp")),
+            "conv_w": ParamSpec((n, cfg.ssm.d_conv, conv_dim),
+                                ("layers", None, "mlp"), init="small"),
+            "conv_b": ParamSpec((n, conv_dim), ("layers", "mlp"), init="zeros"),
+            "dt_bias": ParamSpec((n, H), ("layers", "heads"), init="zeros"),
+            "A_log": ParamSpec((n, H), ("layers", "heads"), init="zeros"),
+            "D": ParamSpec((n, H), ("layers", "heads"), init="ones"),
+            "norm_w": ParamSpec((n, d_inner), ("layers", "mlp"), init="ones"),
+            "out_proj": ParamSpec((n, d_inner, d), ("layers", "mlp", "embed")),
+            "ln": ParamSpec((n, d), ("layers", "embed"), init="ones"),
+        },
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab), ("embed", "vocab"))
+    return specs
+
+
+def mamba2_forward(params, tokens, cfg: ModelConfig,
+                   rt: T.Runtime | None = None, caches=None, positions=None):
+    """Returns (hidden, aux(=0), new_caches). caches: stacked SSMCache."""
+    rt = rt or T.Runtime()
+    B, Sq = tokens.shape
+    x = T.embed_tokens(params, tokens, cfg, rt)
+    d_inner, H, conv_dim = S.dims(cfg)
+
+    if caches is None:
+        def body(x, p):
+            p = T.cast_params(p)
+            h = L.rms_norm(x, p["ln"], cfg.rms_eps)
+            o, _ = S.mamba2_block(p, h, cfg, None)
+            return rt.wsc(x + o, P(rt.batch_axes, None, None)), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        new = None
+    else:
+        def body(x, xs):
+            p, cache = xs
+            p = T.cast_params(p)
+            c = S.SSMCache(*cache)
+            h = L.rms_norm(x, p["ln"], cfg.rms_eps)
+            o, c_new = S.mamba2_block(p, h, cfg, c)
+            x = rt.wsc(x + o, rt.aspec())
+            return x, tuple(c_new)
+
+        x, new = jax.lax.scan(body, x, (params["blocks"], tuple(caches)))
+        new = S.SSMCache(*new)
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, jnp.zeros((), jnp.float32), new
+
+
+def mamba2_init_caches(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    d_inner, H, conv_dim = S.dims(cfg)
+    n = cfg.n_layers
+    return S.SSMCache(
+        conv=jnp.zeros((n, batch, cfg.ssm.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((n, batch, H, cfg.ssm.head_dim, cfg.ssm.d_state),
+                        jnp.float32),
+    )

@@ -1,0 +1,124 @@
+"""Shared building blocks for the model zoo (pure functions over pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, w, eps: float = 1e-6, *, unit_offset: bool = False):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    w = w.astype(jnp.float32)
+    scale = (1.0 + w) if unit_offset else w     # gemma stores w-1
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+# --------------------------------------------------------------------------
+# Rotary embeddings (standard + M-RoPE)
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (B, S) int."""
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta), jnp.float32)          # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv           # (B,S,D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float = 10000.0):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, S) — temporal / height / width position ids.
+    sections: per-axis frequency budget, sum == head_dim // 2.
+    Frequency slot j uses the position id of the axis owning slot j.
+    """
+    d = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(d, theta), jnp.float32)           # (D/2,)
+    owner = jnp.asarray(
+        np.repeat(np.arange(len(sections)), np.asarray(sections)), jnp.int32)
+    # pick each slot's position id: (B, S, D/2)
+    pos = jnp.take(positions3, owner, axis=0)                      # (D/2,B,S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)
+    ang = pos * inv
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int):
+    """Whisper-style fixed sinusoidal table (n, d)."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (dim / max(d // 2 - 1, 1)))
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], -1), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# GLU MLP
+# --------------------------------------------------------------------------
+
+def glu_mlp(x, wg, wu, wd, act: str = "silu"):
+    h = act_fn(act)(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def mlp(x, w1, w2, b1=None, b2=None, act: str = "gelu"):
+    h = x @ w1
+    if b1 is not None:
+        h = h + b1
+    h = act_fn(act)(h)
+    h = h @ w2
+    if b2 is not None:
+        h = h + b2
+    return h
+
+
+# --------------------------------------------------------------------------
+# Chunked causal conv (mamba2 / recurrentgemma temporal conv)
+# --------------------------------------------------------------------------
+
+def causal_conv1d(x, w, prev: jax.Array | None = None):
+    """Depthwise causal conv along time. x: (B, L, C); w: (K, C).
+
+    prev: optional (B, K-1, C) left context (decode/prefill chunking).
+    Returns (y, new_prev) where new_prev is the trailing K-1 inputs.
+    """
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_prev = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(prev)
+    return y, new_prev

@@ -1,0 +1,189 @@
+"""Unified model interface: build(config) -> Model.
+
+One object per architecture family exposing the same surface:
+
+  specs()                         parameter ParamSpec tree
+  init(key)                       materialized params
+  hidden(params, batch, rt)       full-seq forward -> (hidden, aux_loss)
+  logits(params, hidden, rt)      lm head
+  init_caches(batch, max_len)     decode state
+  prefill(params, batch, caches)  fill caches, return last hidden
+  decode(params, caches, tokens)  one-token step -> (logits, caches)
+
+``batch`` is a dict: tokens, and per-family extras (positions3,
+vision_embeds, enc_frames).  This is the single entry point used by the
+trainer, the serving engine and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as E
+from repro.models import hybrid as H
+from repro.models import transformer as T
+from repro.models.modules import abstract_params, init_params
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    specs: Callable[[], dict]
+    hidden: Callable
+    init_caches: Callable
+    decode: Callable
+    prefill: Callable
+
+    def init(self, key, param_dtype=None):
+        return init_params(self.specs(), key, param_dtype)
+
+    def abstract(self, param_dtype=None):
+        return abstract_params(self.specs(), param_dtype)
+
+    def logits(self, params, hidden, rt=None):
+        return T.logits_fn(params, hidden, self.cfg, rt)
+
+
+# ---------------------------------------------------------------------------
+
+def _build_transformer(cfg: ModelConfig) -> Model:
+    def hidden(params, batch, rt=None):
+        return T.forward(params, batch["tokens"], cfg, rt,
+                         positions3=batch.get("positions3"),
+                         vision_embeds=batch.get("vision_embeds"))
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16):
+        return T.init_caches(cfg, batch, max_len, dtype)
+
+    def prefill_with_cache(params, batch, caches, rt=None):
+        rt = rt or T.Runtime()
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = T.embed_tokens(params, tokens, cfg, rt,
+                           batch.get("vision_embeds"))
+        windows = jnp.asarray(T._layer_windows(cfg))
+        ring = T.ring_caches(cfg)
+
+        def body(x, xs):
+            p, win, ck, cv, clen = xs
+            cache = T.A.KVCache(ck, cv, clen)
+            x, cache = T.attn_block(p, x, cfg, rt, window=win,
+                                    positions=positions,
+                                    positions3=batch.get("positions3"),
+                                    cache=cache, ring=ring)
+            if "router" in p:
+                x, _ = T.moe_block(p, x, cfg, rt)
+            else:
+                x = T.ffn_block(p, x, cfg, rt)
+            x = rt.wsc(x, T.P(rt.batch_axes, None, None))
+            return x, (cache.k, cache.v, cache.length)
+
+        new = dict(caches)
+        if cfg.moe and cfg.moe.first_dense:
+            nd = cfg.moe.first_dense
+            c = caches["dense"]
+            x, kv = jax.lax.scan(body, x, (params["dense_blocks"],
+                                           windows[:nd], c.k, c.v, c.length))
+            new["dense"] = T.A.KVCache(*kv)
+            c = caches["blocks"]
+            x, kv = jax.lax.scan(body, x, (params["blocks"], windows[nd:],
+                                           c.k, c.v, c.length))
+            new["blocks"] = T.A.KVCache(*kv)
+        else:
+            c = caches["blocks"]
+            x, kv = jax.lax.scan(body, x, (params["blocks"], windows,
+                                           c.k, c.v, c.length))
+            new["blocks"] = T.A.KVCache(*kv)
+        x = T._norm(cfg)(x, params["final_norm"])
+        return x, new
+
+    def decode(params, caches, tokens, rt=None, positions3=None):
+        return T.decode_step(params, caches, tokens, cfg, rt,
+                             positions3=positions3)
+
+    return Model(cfg=cfg, specs=lambda: T.param_specs(cfg), hidden=hidden,
+                 init_caches=init_caches, decode=decode,
+                 prefill=prefill_with_cache)
+
+
+def _build_recurrentgemma(cfg: ModelConfig) -> Model:
+    def hidden(params, batch, rt=None):
+        h, aux, _ = H.rg_forward(params, batch["tokens"], cfg, rt)
+        return h, aux
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16):
+        return H.rg_init_caches(cfg, batch, dtype)
+
+    def prefill(params, batch, caches, rt=None):
+        h, _, new = H.rg_forward(params, batch["tokens"], cfg, rt, caches)
+        return h, new
+
+    def decode(params, caches, tokens, rt=None, **_):
+        h, _, new = H.rg_forward(params, tokens, cfg, rt, caches)
+        logits = T.logits_fn(params, h, cfg, rt)
+        return logits, new
+
+    return Model(cfg=cfg, specs=lambda: H.rg_param_specs(cfg), hidden=hidden,
+                 init_caches=init_caches, decode=decode, prefill=prefill)
+
+
+def _build_mamba2(cfg: ModelConfig) -> Model:
+    def hidden(params, batch, rt=None):
+        h, aux, _ = H.mamba2_forward(params, batch["tokens"], cfg, rt)
+        return h, aux
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16):
+        return H.mamba2_init_caches(cfg, batch, dtype)
+
+    def prefill(params, batch, caches, rt=None):
+        h, _, new = H.mamba2_forward(params, batch["tokens"], cfg, rt, caches)
+        return h, new
+
+    def decode(params, caches, tokens, rt=None, **_):
+        h, _, new = H.mamba2_forward(params, tokens, cfg, rt, caches)
+        logits = T.logits_fn(params, h, cfg, rt)
+        return logits, new
+
+    return Model(cfg=cfg, specs=lambda: H.mamba2_param_specs(cfg),
+                 hidden=hidden, init_caches=init_caches, decode=decode,
+                 prefill=prefill)
+
+
+def _build_whisper(cfg: ModelConfig) -> Model:
+    def hidden(params, batch, rt=None):
+        enc = E.encode(params, batch["enc_frames"], cfg, rt)
+        h, _ = E.decode(params, batch["tokens"], enc, cfg, rt)
+        return h, jnp.zeros((), jnp.float32)
+
+    def init_caches(batch, max_len, dtype=jnp.bfloat16):
+        return E.whisper_init_caches(cfg, batch, max_len, dtype)
+
+    def prefill(params, batch, caches, rt=None):
+        enc = E.encode(params, batch["enc_frames"], cfg, rt)
+        caches = E.fill_cross_cache(params, enc, caches, cfg)
+        h, caches = E.decode(params, batch["tokens"], None, cfg, rt, caches)
+        return h, caches
+
+    def decode(params, caches, tokens, rt=None, **_):
+        h, new = E.decode(params, tokens, None, cfg, rt, caches)
+        logits = T.logits_fn(params, h, cfg, rt)
+        return logits, new
+
+    return Model(cfg=cfg, specs=lambda: E.whisper_param_specs(cfg),
+                 hidden=hidden, init_caches=init_caches, decode=decode,
+                 prefill=prefill)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return _build_mamba2(cfg)
+    if cfg.family == "hybrid":
+        return _build_recurrentgemma(cfg)
+    if cfg.family == "audio":
+        return _build_whisper(cfg)
+    return _build_transformer(cfg)     # dense | moe | vlm

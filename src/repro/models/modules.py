@@ -1,0 +1,118 @@
+"""Minimal pytree parameter system (flax/optax are unavailable offline).
+
+Single source of truth per architecture is a nested dict of ``ParamSpec``
+(shape, dtype, logical axes, initializer).  From it we derive:
+
+* materialized parameters            (``init_params``)       — tests/examples
+* ``jax.ShapeDtypeStruct`` skeleton  (``abstract_params``)   — dry-run
+* ``NamedSharding`` tree             (``repro.distributed.sharding``)
+
+Logical axis names used across the model zoo:
+
+  vocab, embed, heads (fused q heads x head_dim), kv_heads, mlp (ffn hidden),
+  expert, layers (stacked scan dim), conv, state, seq — mapping to mesh axes
+  lives in one rules table, so changing the parallelism plan is a one-line
+  edit per experiment (this is where the §Perf sharding hillclimbs happen).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    axes: tuple                    # logical axis name per dim (None ok)
+    dtype: Any = jnp.float32
+    init: str = "normal"           # normal | zeros | ones | embed | small
+    scale: float | None = None     # stddev override
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_paths(tree, prefix=()):
+    """Yield (path_tuple, ParamSpec) leaves of a nested-dict spec tree."""
+    if is_spec(tree):
+        yield prefix, tree
+        return
+    for k in sorted(tree):
+        yield from tree_paths(tree[k], prefix + (k,))
+
+
+def tree_map_specs(fn: Callable, tree):
+    if is_spec(tree):
+        return fn(tree)
+    return {k: tree_map_specs(fn, v) for k, v in tree.items()}
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    """Fan-in = product of input dims; leading stack axes (layers/expert)
+    don't contribute.  Convention: last axis is the output dim."""
+    dims = [d for d, a in zip(spec.shape[:-1], spec.axes[:-1])
+            if a not in ("layers", "expert")]
+    return int(np.prod(dims)) if dims else max(spec.shape[-1], 1)
+
+
+def _initializer(spec: ParamSpec, key, dtype):
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init in ("normal", "embed", "small"):
+        if spec.scale is not None:
+            std = spec.scale
+        elif spec.init == "embed":
+            std = 1.0
+        elif spec.init == "small":
+            std = 0.02
+        else:
+            fan = _fan_in(spec)
+            std = 1.0 / np.sqrt(max(fan, 1))
+        return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(spec_tree, key, param_dtype=None):
+    """Materialize parameters. Per-leaf keys are derived from the path so
+    adding/removing parameters never reshuffles other leaves."""
+
+    def leaf(path, spec):
+        h = np.uint32(abs(hash("/".join(map(str, path)))) % (2**31 - 1))
+        k = jax.random.fold_in(key, int(h))
+        return _initializer(spec, k, param_dtype or spec.dtype)
+
+    def rec(tree, prefix=()):
+        if is_spec(tree):
+            return leaf(prefix, tree)
+        return {k: rec(v, prefix + (k,)) for k, v in tree.items()}
+
+    return rec(spec_tree)
+
+
+def abstract_params(spec_tree, param_dtype=None):
+    return tree_map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype or s.dtype),
+        spec_tree,
+    )
+
+
+def param_count(spec_tree) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in tree_paths(spec_tree))
+
+
+def param_bytes(spec_tree, param_dtype=None) -> int:
+    def nbytes(s: ParamSpec):
+        dt = np.dtype(param_dtype or s.dtype)
+        return int(np.prod(s.shape)) * dt.itemsize
+    return sum(nbytes(s) for _, s in tree_paths(spec_tree))

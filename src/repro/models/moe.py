@@ -1,0 +1,149 @@
+"""Mixture-of-Experts with the paper's bucket dispatch as a first-class path.
+
+Token->expert dispatch is *exactly* the Extoll event-aggregation problem:
+many small payloads (tokens) addressed to sparse destinations (experts) must
+be binned into capacity-bounded buckets and shipped in one collective.  The
+two implementations mirror the §Perf baseline/optimized pair:
+
+* ``impl="gspmd"``  — capacity-binned dispatch buffers with sharding
+  constraints; XLA/GSPMD chooses the collectives (baseline; typically
+  all-gathers the dispatch buffer across the expert axis).
+* ``impl="bucket"`` — explicit shard_map expert parallelism: per-device
+  bucket aggregation (same positions logic as ``core.aggregator``) followed
+  by a single ``all_to_all`` over the ``model`` axis, expert compute on
+  local experts, and the inverse ``all_to_all``.  This is the paper's
+  aggregate-then-route strategy on TPU ICI.
+
+Both paths share the router and the capacity/overflow semantics, so tests
+can assert they agree bit-for-bit (up to reduction order) on one device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+
+
+class MoEStats(NamedTuple):
+    aux_loss: jax.Array        # load-balance loss
+    router_z: jax.Array        # router z-loss
+    dropped: jax.Array         # fraction of (token, k) assignments dropped
+
+
+def router_probs(x, w_router, jitter_key=None, jitter=0.0):
+    """x: (T, d) -> probs (T, E), logits f32."""
+    logits = (x @ w_router).astype(jnp.float32)
+    if jitter_key is not None and jitter > 0:
+        logits += jax.random.uniform(jitter_key, logits.shape, minval=-jitter,
+                                     maxval=jitter)
+    return jax.nn.softmax(logits, -1), logits
+
+
+def _positions(dest, n_dest):
+    """Slot of each assignment within its destination (window order)."""
+    oh = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=0) - oh
+    return jnp.sum(pos * oh, axis=1), jnp.sum(oh, axis=0)
+
+
+def _capacity(n_tokens: int, top_k: int, n_experts: int, factor: float,
+              multiple: int = 4) -> int:
+    c = int(n_tokens * top_k / n_experts * factor) + 1
+    return max(-(-c // multiple) * multiple, multiple)
+
+
+def expert_glu(xe, wg, wu, wd, act="silu"):
+    """xe: (E, C, d); weights (E, d, f)/(E, f, d)."""
+    wg, wu, wd = (w.astype(xe.dtype) for w in (wg, wu, wd))
+    h = L.act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _route(x, w_router, moe: MoEConfig, key):
+    T = x.shape[0]
+    probs, logits = router_probs(x, w_router, key, moe.router_jitter)
+    gate, experts = jax.lax.top_k(probs, moe.top_k)        # (T, k)
+    # load-balance aux (Switch/GShard): E * mean(frac_tokens) . mean(prob)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(experts[:, 0], moe.n_experts, dtype=jnp.float32), 0)
+    aux = moe.n_experts * jnp.sum(me * ce)
+    zl = jnp.mean(jax.nn.logsumexp(logits, -1) ** 2)
+    return gate, experts, MoEStats(aux, zl, jnp.float32(0.0))
+
+
+def moe_layer_local(x, params, moe: MoEConfig, *, act="silu", key=None,
+                    capacity: int | None = None, wsc=None):
+    """Single-device / GSPMD path. x: (T, d).
+
+    ``wsc(tensor, spec)`` — optional sharding-constraint hook injected by the
+    runtime (keeps this module mesh-agnostic for CPU tests).
+    """
+    wsc = wsc or (lambda t, _spec: t)
+    T, d = x.shape
+    gate, experts, stats = _route(x, params["router"], moe, key)
+    C = capacity or _capacity(T, moe.top_k, moe.n_experts, moe.capacity_factor)
+    flat_e = experts.reshape(-1)                           # (T*k,)
+    pos, counts = _positions(flat_e, moe.n_experts)
+    keep = pos < C
+    e_idx = jnp.where(keep, flat_e, moe.n_experts)         # drop -> OOB
+    p_idx = jnp.where(keep, pos, 0)
+    tok = jnp.repeat(jnp.arange(T), moe.top_k)
+    buf = jnp.zeros((moe.n_experts, C, d), x.dtype).at[e_idx, p_idx].set(
+        x[tok], mode="drop")
+    buf = wsc(buf, P("model", None, None))
+    y_e = expert_glu(buf, params["w_gate"], params["w_up"], params["w_down"],
+                     act)
+    y = y_e[jnp.minimum(e_idx, moe.n_experts - 1), p_idx]  # (T*k, d)
+    y = jnp.where(keep[:, None], y, 0.0)
+    y = (y.reshape(T, moe.top_k, d)
+         * gate[..., None].astype(y.dtype)).sum(1)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, stats._replace(dropped=dropped)
+
+
+def moe_layer_bucket(x, params, moe: MoEConfig, *, axis: str = "model",
+                     act="silu", key=None, capacity: int | None = None):
+    """Explicit EP path — call *inside* shard_map. x: (T_local, d).
+
+    Expert weights arrive pre-sliced over ``axis``: (E/ep, d, f).
+    Router weights arrive full (replicated).
+    """
+    ep = jax.lax.axis_size(axis)
+    T, d = x.shape
+    E = moe.n_experts
+    e_loc = E // ep
+    gate, experts, stats = _route(x, params["router"], moe, key)
+    C = capacity or _capacity(T, moe.top_k, E, moe.capacity_factor)
+    flat_e = experts.reshape(-1)
+    pos, _counts = _positions(flat_e, E)
+    keep = pos < C
+    e_idx = jnp.where(keep, flat_e, E)
+    p_idx = jnp.where(keep, pos, 0)
+    tok = jnp.repeat(jnp.arange(T), moe.top_k)
+    # bucket aggregation by destination expert (paper §3.1, tokens as events)
+    buf = jnp.zeros((E, C, d), x.dtype).at[e_idx, p_idx].set(
+        x[tok], mode="drop")
+    # ship buckets to their owner device: one all_to_all over the EP axis
+    recv = jax.lax.all_to_all(buf.reshape(ep, e_loc, C, d), axis, 0, 0,
+                              tiled=True).reshape(ep, e_loc, C, d)
+    # compute local experts on ep*C rows each
+    xe = jnp.moveaxis(recv, 0, 1).reshape(e_loc, ep * C, d)
+    y_e = expert_glu(xe, params["w_gate"], params["w_up"], params["w_down"],
+                     act)
+    # inverse route
+    back = jnp.moveaxis(y_e.reshape(e_loc, ep, C, d), 1, 0)
+    y_buf = jax.lax.all_to_all(back, axis, 0, 0, tiled=True)
+    y_buf = y_buf.reshape(E, C, d)
+    y = y_buf[jnp.minimum(e_idx, E - 1), p_idx]
+    y = jnp.where(keep[:, None], y, 0.0)
+    y = (y.reshape(T, moe.top_k, d) * gate[..., None].astype(y.dtype)).sum(1)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, stats._replace(dropped=dropped)

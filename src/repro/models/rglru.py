@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)                      (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (per-channel decay)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``lax.associative_scan`` over the length axis (the pair
+composition (a1,b1)∘(a2,b2) = (a1·a2, a2·b1 + b2)); decode is the one-step
+update.  The full residual block is Griffin's: linear in, temporal conv,
+RG-LRU, multiplicative GeLU gate, linear out.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+C_RGLRU = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    conv: jax.Array      # (B, K-1, W) conv left-context
+    h: jax.Array         # (B, W) recurrent state (f32)
+
+
+def _gates(params, x):
+    w_a = params["w_a"].astype(x.dtype)
+    w_x = params["w_x"].astype(x.dtype)
+    r = jax.nn.sigmoid(x @ w_a + params["b_a"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ w_x + params["b_x"].astype(x.dtype))
+    log_a = -C_RGLRU * jax.nn.softplus(params["lam"]) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, gated
+
+
+def rglru_scan(params, x, h0=None):
+    """x: (B, Lq, W). Returns (y, h_final). Associative scan over L."""
+    a, b = _gates(params, x)                     # (B,L,W) f32
+    if h0 is not None:
+        # fold initial state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([h0[:, None, :], b], axis=1)
+
+    def comb(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(comb, (a, b), axis=1)
+    if h0 is not None:
+        hh = hh[:, 1:]
+    return hh.astype(x.dtype), hh[:, -1]
+
+
+def rglru_step(params, x_t, h):
+    """x_t: (B, W); h: (B, W) f32."""
+    a, b = _gates(params, x_t[:, None, :])
+    h = a[:, 0] * h + b[:, 0]
+    return h.astype(x_t.dtype), h
+
+
+def recurrent_block(params, x, cfg: ModelConfig,
+                    cache: RGLRUCache | None = None):
+    """Griffin recurrent residual block. x: (B, Lq, d_model)."""
+    w = cfg.recurrent.lru_width or cfg.d_model
+    Bb, Lq, _ = x.shape
+    # two branches from d_model
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))   # (B,L,W)
+    xr = x @ params["w_in"].astype(x.dtype)
+    conv_prev = cache.conv if cache is not None else None
+    xr, conv_new = L.causal_conv1d(xr, params["conv_w"].astype(x.dtype), conv_prev)
+    xr = xr + params["conv_b"].astype(x.dtype)
+    if cache is None or Lq > 1:
+        h0 = cache.h if cache is not None else None
+        y, h_last = rglru_scan(params, xr, h0)
+    else:
+        y, h_last = rglru_step(params, xr[:, 0], cache.h)
+        y = y[:, None]
+    out = ((y * gate) @ params["w_out"].astype(gate.dtype)).astype(x.dtype)
+    new_cache = RGLRUCache(conv=conv_new, h=h_last) if cache is not None else None
+    return out, new_cache

@@ -1,0 +1,145 @@
+"""Mamba-2 SSD (state-space duality) blocks — chunked train/prefill scan and
+O(1)-state decode.  Pure JAX; the chunked form is the TPU-friendly one
+(dense matmuls inside chunks, one small recurrence across chunks).
+
+Shapes: B batch, Lseq length, H heads, Pd head_dim, N d_state, G groups.
+Block layout follows mamba2: in_proj -> [z | x | B | C | dt], causal
+depthwise conv over [x|B|C], SSD, gated RMSNorm, out_proj.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array       # (B, K-1, conv_dim) conv left-context
+    state: jax.Array      # (B, H, Pd, N) SSD recurrent state
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk: int):
+    """Chunked SSD scan.
+
+    x:  (B, Lq, H, Pd)   inputs (already conv'd/activated)
+    dt: (B, Lq, H)       positive step sizes
+    A:  (H,)             negative decay rates
+    B_, C_: (B, Lq, G, N)
+    Returns y (B, Lq, H, Pd) and final state (B, H, Pd, N).
+    """
+    Bb, Lq, H, Pd = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    nc = Lq // chunk
+    rep = H // G
+
+    # chunk-major layout for the scan: (nc, B, chunk, ...)
+    xc = jnp.moveaxis(x.reshape(Bb, nc, chunk, H, Pd), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bb, nc, chunk, H), 1, 0)
+    Bc = jnp.moveaxis(B_.reshape(Bb, nc, chunk, G, N), 1, 0)
+    Cc = jnp.moveaxis(C_.reshape(Bb, nc, chunk, G, N), 1, 0)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(S, xs):
+        """One chunk: quadratic intra-chunk + carried inter-chunk state.
+
+        Scanning keeps the (chunk x chunk) decay tensor at one-chunk size,
+        which is what bounds memory at 32k/500k sequence lengths.
+        """
+        xj, dtj, Bj, Cj = xs
+        Bh = jnp.repeat(Bj, rep, axis=2)                  # (B,c,H,N)
+        Ch = jnp.repeat(Cj, rep, axis=2)
+        da = dtj * A[None, None, :]                       # (B,c,H) negative
+        cum = jnp.cumsum(da, axis=1)
+        seg_end = cum[:, -1, :]                           # (B,H)
+
+        diff = cum[:, :, None, :] - cum[:, None, :, :]    # (B,i,j,H)
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(diff), 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", Ch, Bh)
+        y_diag = jnp.einsum("bijh,bijh,bjh,bjhp->bihp",
+                            scores, decay, dtj, xj)
+        # inter-chunk contribution from carried state
+        y_off = jnp.einsum("bihn,bhpn,bih->bihp",
+                           Ch, S.astype(Ch.dtype), jnp.exp(cum))
+        # update state: S <- exp(seg_end) S + sum_j exp(seg_end-cum_j) dt x B
+        w = jnp.exp(seg_end[:, None, :] - cum) * dtj      # (B,c,H)
+        S_loc = jnp.einsum("bjh,bjhp,bjhn->bhpn", w, xj, Bh)
+        S = S * jnp.exp(seg_end)[..., None, None].astype(S.dtype) \
+            + S_loc.astype(S.dtype)
+        return S, y_diag + y_off
+
+    s0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+    s_final, yc = jax.lax.scan(chunk_step, s0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bb, Lq, H, Pd)
+    return y, s_final
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token SSD update.
+
+    state: (B,H,Pd,N); x_t: (B,H,Pd); dt_t: (B,H); B_t,C_t: (B,G,N).
+    """
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B_t, rep, axis=1)                     # (B,H,N)
+    Ch = jnp.repeat(C_t, rep, axis=1)
+    decay = jnp.exp(dt_t * A[None, :])[..., None, None]   # (B,H,1,1)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt_t, x_t, Bh)
+    state = state * decay + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return state, y
+
+
+def mamba2_block(params, x, cfg: ModelConfig, cache: SSMCache | None = None):
+    """Full block. x: (B, Lq, d_model). Returns (y, new_cache)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    G, N, Pd = s.n_groups, s.d_state, s.head_dim
+    Bb, Lq, _ = x.shape
+
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)        # (B,L,·)
+    z, xbc, dt = jnp.split(
+        zxbcdt, [d_inner, d_inner + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H) f32
+
+    conv_prev = cache.conv if cache is not None else None
+    xbc, conv_new = L.causal_conv1d(xbc, params["conv_w"].astype(xbc.dtype), conv_prev)
+    xbc = jax.nn.silu(xbc + params["conv_b"].astype(xbc.dtype))
+    xs, B_, C_ = jnp.split(xbc, [d_inner, d_inner + G * N], axis=-1)
+    xs = xs.reshape(Bb, Lq, H, Pd)
+    B_ = B_.reshape(Bb, Lq, G, N)
+    C_ = C_.reshape(Bb, Lq, G, N)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (H,)
+
+    if cache is None or Lq > 1:
+        pad = (-Lq) % s.chunk
+        if pad:
+            padded = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+            y, st = ssd_chunked(padded(xs), padded(dt), A, padded(B_),
+                                padded(C_), s.chunk)
+            y = y[:, :Lq]
+        else:
+            y, st = ssd_chunked(xs, dt, A, B_, C_, s.chunk)
+    else:
+        st0 = cache.state
+        st, y = ssd_decode_step(st0, xs[:, 0], dt[:, 0], A, B_[:, 0], C_[:, 0])
+        y = y[:, None]
+    y = y.astype(jnp.float32) + xs.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(Bb, Lq, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), params["norm_w"], cfg.rms_eps)
+    out = y @ params["out_proj"].astype(y.dtype)
+    new_cache = SSMCache(conv=conv_new, state=st.astype(jnp.float32)) \
+        if cache is not None else None
+    return out, new_cache

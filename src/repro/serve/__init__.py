@@ -1,0 +1,2 @@
+"""Serving: batched engine with continuous slots + credit accounting."""
+from repro.serve import engine  # noqa: F401

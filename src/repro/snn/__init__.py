@@ -1,0 +1,4 @@
+"""Spiking-network substrate: the paper's workload (wafer-scale LIF
+networks, Potjans-Diesmann cortical microcircuit) running over the
+bucket-exchange fabric."""
+from repro.snn import lif, microcircuit, network, simulator  # noqa: F401

@@ -1,0 +1,2 @@
+"""Training: optimizers, step factory, fault-tolerant trainer."""
+from repro.train import optimizer, step, trainer  # noqa: F401

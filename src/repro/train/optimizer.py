@@ -1,0 +1,204 @@
+"""Optimizers and LR schedules (optax is unavailable offline).
+
+* AdamW — default for every arch that fits; moments live with the params
+  and inherit their sharding (ZeRO via the FSDP rules).
+* Adafactor — factored second moment + bf16 momentum, for arctic-480b
+  where full f32 Adam moments (3.8 TB) cannot fit 16 GB/chip at one pod.
+* Schedules — linear warmup into {cosine, WSD}.  WSD (warmup-stable-decay)
+  is MiniCPM's schedule, reproduced here because minicpm-2b is assigned.
+
+All functions are pure pytree->pytree; state is a NamedTuple of trees so it
+checkpoints like anything else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"            # cosine | wsd | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: final fraction spent decaying
+    min_ratio: float = 0.1
+
+
+def learning_rate(cfg: ScheduleConfig, step):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        return cfg.peak_lr * warm
+    if cfg.kind == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(np.pi * t))
+        return cfg.peak_lr * warm * (cfg.min_ratio + (1 - cfg.min_ratio) * cos)
+    if cfg.kind == "wsd":
+        decay_start = cfg.total_steps * (1 - cfg.decay_frac)
+        t = jnp.clip((s - decay_start)
+                     / max(cfg.total_steps - decay_start, 1), 0, 1)
+        # MiniCPM uses exponential-ish anneal; linear-in-log approximation
+        stable = jnp.where(s < decay_start, 1.0,
+                           cfg.min_ratio ** t)
+        return cfg.peak_lr * warm * stable
+    raise ValueError(cfg.kind)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"             # adamw | adafactor
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: ScheduleConfig = ScheduleConfig()
+    momentum_dtype: str = "float32"     # adafactor: "bfloat16" to halve it
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jax.Array
+
+
+class AdafactorState(NamedTuple):
+    m: dict            # momentum (possibly bf16)
+    vr: dict           # row stats  (reduced over last dim)
+    vc: dict           # col stats  (reduced over second-to-last dim)
+    v: dict            # full stats for <2D params
+    count: jax.Array
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda t: (t * scale).astype(t.dtype), grads), g
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda t: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), t)
+    return AdamWState(m=zeros(params), v=zeros(params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: OptimizerConfig):
+    c = state.count + 1
+    b1, b2 = cfg.b1, cfg.b2
+    lr = learning_rate(cfg.schedule, c)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** c.astype(jnp.float32))
+        vh = v / (1 - b2 ** c.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:                       # no decay on norms/biases
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(new_m, new_v, c), {"lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, cfg: OptimizerConfig) -> AdafactorState:
+    mdt = jnp.bfloat16 if cfg.momentum_dtype == "bfloat16" else jnp.float32
+
+    def rowcol(p):
+        if p.ndim >= 2:
+            return (jnp.zeros(p.shape[:-1], jnp.float32),
+                    jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                    jnp.zeros((1,), jnp.float32))
+        return (jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.float32),
+                jnp.zeros_like(p, jnp.float32))
+
+    trip = jax.tree_util.tree_map(rowcol, params)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], trip, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, mdt), params)
+    return AdafactorState(m=m, vr=pick(0), vc=pick(1), v=pick(2),
+                          count=jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(grads, state: AdafactorState, params,
+                     cfg: OptimizerConfig):
+    c = state.count + 1
+    lr = learning_rate(cfg.schedule, c)
+    beta2 = 1.0 - c.astype(jnp.float32) ** -0.8
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+
+    def upd(g, m, vr, vc, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            r = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            denom = jnp.sqrt(r[..., None] * vc[..., None, :])
+        else:
+            v = beta2 * v + (1 - beta2) * g2
+            denom = jnp.sqrt(v)
+        u = g / jnp.maximum(denom, 1e-30)
+        # update clipping (Adafactor RMS rule)
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        mu = 0.9 * m.astype(jnp.float32) + 0.1 * u
+        step = mu + cfg.weight_decay * p.astype(jnp.float32) * (p.ndim >= 2)
+        newp = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return newp, mu.astype(m.dtype), vr, vc, v
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.vr, state.vc,
+                                 state.v, params)
+    g = lambda i: jax.tree_util.tree_map(
+        lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return g(0), AdafactorState(g(1), g(2), g(3), g(4), c), {
+        "lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+
+def init_opt(params, cfg: OptimizerConfig):
+    if cfg.kind == "adafactor":
+        return adafactor_init(params, cfg)
+    return adamw_init(params)
+
+
+def apply_opt(grads, state, params, cfg: OptimizerConfig):
+    if cfg.kind == "adafactor":
+        return adafactor_update(grads, state, params, cfg)
+    return adamw_update(grads, state, params, cfg)

@@ -1,0 +1,157 @@
+"""Loss + train-step factory.
+
+The cross-entropy is computed in *sequence chunks* with ``jax.checkpoint``
+on the chunk function, so the (B, S, vocab) logits tensor never exists in
+memory — at gemma2's 256k vocab that tensor would be ~4 GB/device at train
+shape.  The logits chunk is sharded over the model axis (vocab dim), and
+the logsumexp reduction lets GSPMD insert one small all-reduce per chunk.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as Lyr
+from repro.models.model import Model
+from repro.models.transformer import Runtime
+from repro.train import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = opt.OptimizerConfig()
+    aux_weight: float = 0.01        # MoE load-balance loss weight
+    z_weight: float = 1e-4          # logit z-loss
+    microbatch: int = 0             # 0 = no gradient accumulation
+    remat: bool = True
+
+
+def chunked_xent(params, hidden, labels, cfg: ModelConfig, rt: Runtime,
+                 chunk: int | None = None):
+    """Mean NLL over tokens, never materializing full logits.
+
+    hidden: (B, S, d) bf16; labels: (B, S) int32 (-1 = masked).
+    """
+    B, S, d = hidden.shape
+    chunk = chunk or min(rt.logits_chunk, S)
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    # leave the (possibly sequence-sharded) residual layout behind: the
+    # loss chunks along S, so re-shard to batch-only once, here.
+    hidden = rt.wsc(hidden, P(rt.batch_axes, None, None))
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    @jax.checkpoint
+    def one(h_c, y_c):
+        logits = h_c @ w.astype(h_c.dtype)            # (B, c, V)
+        logits = logits * cfg.logit_scale
+        logits = Lyr.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+        logits = rt.wsc(logits, P(rt.batch_axes, None, rt.model_axis))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (y_c >= 0).astype(jnp.float32)
+        nll = (lse - gold) * mask
+        zsq = (lse * lse) * mask
+        return nll.sum(), zsq.sum(), mask.sum()
+
+    def body(carry, xs):
+        nll, zsq, n = carry
+        h_c, y_c = xs
+        a, b, c = one(h_c, y_c)
+        return (nll + a, zsq + b, n + c), None
+
+    hs = jnp.moveaxis(hidden.reshape(B, nc, chunk, d), 1, 0)
+    ys = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    (nll, zsq, n), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros(()), jnp.zeros(())), (hs, ys))
+    n = jnp.maximum(n, 1.0)
+    return nll / n, zsq / n
+
+
+def make_loss_fn(model: Model, tcfg: TrainConfig, rt: Runtime):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        hidden, aux = model.hidden(params, batch, rt)
+        nll, zsq = chunked_xent(params, hidden, batch["labels"], cfg, rt)
+        loss = nll + tcfg.aux_weight * aux + tcfg.z_weight * zsq
+        metrics = {"loss": loss, "nll": nll, "aux": aux, "z": zsq}
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, rt: Runtime):
+    """Returns train_step(state_dict, batch) -> (state_dict, metrics).
+
+    state_dict = {"params": ..., "opt": ..., "step": i32}. Microbatching
+    (gradient accumulation) splits the batch on the leading axis.
+    """
+    loss_fn = make_loss_fn(model, tcfg, rt)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            mb = tcfg.microbatch
+            split = jax.tree_util.tree_map(
+                lambda t: t.reshape((mb, t.shape[0] // mb) + t.shape[1:]),
+                batch)
+
+            def acc(carry, b):
+                g_sum, m_sum = carry
+                (_, m), g = grad_fn(params, b)
+                g_sum = jax.tree_util.tree_map(jnp.add, g_sum, g)
+                m_sum = jax.tree_util.tree_map(jnp.add, m_sum, m)
+                return (g_sum, m_sum), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": 0.0, "nll": 0.0, "aux": 0.0, "z": 0.0}
+            zeros_m = jax.tree_util.tree_map(jnp.float32, zeros_m)
+            (g, m), _ = jax.lax.scan(acc, (zeros_g, zeros_m), split)
+            g = jax.tree_util.tree_map(lambda t: t / mb, g)
+            m = jax.tree_util.tree_map(lambda t: t / mb, m)
+            return g, m
+        (_, m), g = grad_fn(params, batch)
+        return g, m
+
+    def train_step(state, batch):
+        params = state["params"]
+        grads, metrics = compute_grads(params, batch)
+        if rt.grad_specs is not None:
+            # pin gradients to the parameter sharding: the backward matmul
+            # partials then reduce-scatter (each rank keeps its shard)
+            # instead of all-reducing the full dW
+            grads = jax.tree_util.tree_map(
+                lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+                grads, rt.grad_specs)
+        new_params, opt_state, om = opt.apply_opt(
+            grads, state["opt"], params, tcfg.optimizer)
+        metrics.update(om)
+        return {"params": new_params, "opt": opt_state,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key, tcfg: TrainConfig,
+                     param_dtype=None) -> dict:
+    params = model.init(key, param_dtype)
+    return {"params": params, "opt": opt.init_opt(params, tcfg.optimizer),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: Model, tcfg: TrainConfig, param_dtype=None):
+    """ShapeDtypeStruct tree of the train state (dry-run, no allocation)."""
+    params = model.abstract(param_dtype)
+    opt_state = jax.eval_shape(
+        lambda p: opt.init_opt(p, tcfg.optimizer), params)
+    return {"params": params, "opt": opt_state,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}

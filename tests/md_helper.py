@@ -1,0 +1,31 @@
+"""Run multi-device JAX snippets in a subprocess with forced host devices.
+
+Tests must NOT set ``xla_force_host_platform_device_count`` globally (the
+rest of the suite should see one device), so anything needing a mesh runs
+through here.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_md(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Execute ``code`` with N fake devices; returns stdout; raises on rc!=0."""
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + code],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}")
+    return out.stdout

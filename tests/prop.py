@@ -1,0 +1,70 @@
+"""Mini property-based testing harness.
+
+``hypothesis`` cannot be installed in this offline container, so this
+module provides the equivalent discipline in ~40 lines: seeded random case
+generation over declared strategies, many cases per property, and a
+reproduction line printed on failure (the seed fully determines the case).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import numpy as np
+
+N_CASES = int(os.environ.get("PROP_CASES", "25"))
+
+
+class draw:
+    """Strategy namespace: each returns fn(rng) -> value."""
+
+    @staticmethod
+    def ints(lo, hi):
+        return lambda rng: int(rng.integers(lo, hi + 1))
+
+    @staticmethod
+    def floats(lo, hi):
+        return lambda rng: float(rng.uniform(lo, hi))
+
+    @staticmethod
+    def choice(*options):
+        return lambda rng: options[int(rng.integers(0, len(options)))]
+
+    @staticmethod
+    def array(shape_fn, lo, hi, dtype=np.int64):
+        def gen(rng):
+            shape = shape_fn(rng) if callable(shape_fn) else shape_fn
+            if np.issubdtype(np.dtype(dtype), np.floating):
+                return rng.uniform(lo, hi, shape).astype(dtype)
+            return rng.integers(lo, hi, shape).astype(dtype)
+        return gen
+
+
+def given(n_cases: int | None = None, **strategies):
+    """Decorator: run the test once per seeded random case."""
+
+    def deco(fn):
+        # NOTE: the wrapper must expose a ZERO-arg signature, otherwise
+        # pytest mistakes the strategy parameters for fixtures.
+        def wrapper():
+            cases = n_cases or N_CASES
+            for seed in range(cases):
+                rng = np.random.default_rng(seed * 7919 + 13)
+                drawn = {k: s(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception:
+                    print(f"\n[prop] FAILED case seed={seed}: "
+                          f"{ {k: _short(v) for k, v in drawn.items()} }")
+                    raise
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def _short(v):
+    if isinstance(v, np.ndarray):
+        return f"array{v.shape}:{v.dtype}"
+    return v

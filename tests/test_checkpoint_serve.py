@@ -1,0 +1,108 @@
+"""Checkpointer (atomicity, retention, exact restore) and serving engine."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config, reduced
+from repro.models import build
+from repro.serve.engine import Engine, Request, ServeConfig
+
+
+def _state():
+    return {
+        "params": {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+                   "b": {"c": np.asarray(2.5, np.float32)}},
+        "opt": (np.ones((3,), np.int32), np.zeros((2,), np.float32)),
+        "step": np.asarray(7, np.int32),
+    }
+
+
+def test_checkpoint_roundtrip_and_retention():
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d, keep=2)
+        st = _state()
+        for step in (10, 20, 30):
+            st["step"] = np.asarray(step, np.int32)
+            ck.save(step, st)
+        # retention: only last 2 kept
+        dirs = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+        assert len(dirs) == 2
+        assert ck.latest_step() == 30
+        got = ck.restore(_state())
+        assert int(got["step"]) == 30
+        np.testing.assert_array_equal(got["params"]["a"], st["params"]["a"])
+        assert isinstance(got["opt"], tuple)
+        np.testing.assert_array_equal(got["opt"][0], st["opt"][0])
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_checkpoint_atomic_no_partial_dirs():
+    """A .tmp directory must never be picked up as a checkpoint."""
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d)
+        ck.save(5, _state())
+        os.makedirs(os.path.join(d, "step_0000000009.tmp"))
+        assert ck.latest_step() == 5
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def test_checkpoint_restores_namedtuples():
+    from repro.train.optimizer import OptimizerConfig, adamw_init
+    from repro.train.step import TrainConfig, init_train_state
+    cfg = reduced(get_config("minicpm_2b"))
+    m = build(cfg)
+    tcfg = TrainConfig()
+    state = init_train_state(m, jax.random.PRNGKey(0), tcfg)
+    d = tempfile.mkdtemp()
+    try:
+        ck = Checkpointer(d)
+        ck.save(1, jax.device_get(state))
+        got = ck.restore(jax.tree_util.tree_map(np.asarray,
+                                                jax.device_get(state)))
+        for a, b in zip(jax.tree_util.tree_leaves(state),
+                        jax.tree_util.tree_leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def test_engine_greedy_deterministic():
+    cfg = reduced(get_config("qwen15_4b"))
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, ServeConfig(slots=2, max_len=64, max_new_tokens=8))
+    reqs = [Request(rid=i, prompt=np.asarray([5, 6, 7 + i], np.int32))
+            for i in range(3)]
+    out1 = eng.generate_batch(params, reqs)
+    out2 = eng.generate_batch(params, reqs)
+    assert set(out1) == {0, 1, 2}
+    for r in range(3):
+        np.testing.assert_array_equal(out1[r], out2[r])
+        assert 1 <= len(out1[r]) <= 8
+
+
+def test_engine_eos_stops():
+    cfg = reduced(get_config("qwen15_4b"))
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    eng = Engine(m, ServeConfig(slots=1, max_len=64, max_new_tokens=8,
+                                eos_id=2))
+    out = eng.generate_batch(params, [Request(0, np.asarray([1, 2, 3]))])
+    seq = out[0]
+    eos_pos = np.where(seq == 2)[0]
+    if len(eos_pos):
+        assert eos_pos[0] == len(seq) - 1        # truncated right after EOS

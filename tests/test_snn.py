@@ -1,0 +1,107 @@
+"""SNN substrate tests: LIF dynamics, microcircuit construction, partition."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.snn import lif, microcircuit as mc, network
+
+
+def test_lif_subthreshold_decay():
+    p = lif.LIFParams()
+    st = lif.LIFState(v=jnp.asarray([-55.0]), i_exc=jnp.zeros(1),
+                      i_inh=jnp.zeros(1), refrac=jnp.zeros(1, jnp.int32))
+    st2, spk = lif.step(st, p, jnp.zeros(1), jnp.zeros(1))
+    # decays toward E_L, no spike
+    assert not bool(spk[0])
+    assert float(st2.v[0]) < -55.0 + 1e-6
+    assert float(st2.v[0]) > p.e_l
+
+
+def test_lif_spike_and_refractory():
+    p = lif.LIFParams(t_ref=1.0, dt=0.1)
+    st = lif.LIFState(v=jnp.asarray([-50.01]), i_exc=jnp.asarray([5000.0]),
+                      i_inh=jnp.zeros(1), refrac=jnp.zeros(1, jnp.int32))
+    st, spk = lif.step(st, p, jnp.zeros(1), jnp.zeros(1))
+    assert bool(spk[0])
+    assert float(st.v[0]) == p.v_reset
+    assert int(st.refrac[0]) == 10
+    # refractory: voltage frozen regardless of input
+    st2, spk2 = lif.step(st, p, jnp.zeros(1), jnp.zeros(1))
+    assert not bool(spk2[0])
+    assert float(st2.v[0]) == p.v_reset
+
+
+def test_lif_rate_increases_with_drive():
+    p = lif.LIFParams()
+    n = 200
+
+    def run(drive):
+        st = lif.init_state(n, p, jax.random.PRNGKey(0))
+        tot = 0
+        for t in range(100):
+            st, spk = lif.step(st, p, jnp.full((n,), drive), jnp.zeros(n))
+            tot += int(spk.sum())
+        return tot
+
+    low, high = run(50.0), run(400.0)
+    assert high > low
+
+
+def test_microcircuit_structure():
+    spec = mc.MicrocircuitSpec(scale=0.005, seed=1)
+    w, is_inh = spec.weight_matrix()
+    n = spec.n_neurons
+    assert w.shape == (n, n)
+    off = spec.offsets()
+    # inhibitory columns are negative, excitatory positive
+    for j, pop in enumerate(mc.POPULATIONS):
+        cols = w[:, off[j]:off[j + 1]]
+        nz = cols[cols != 0]
+        if len(nz):
+            assert (nz < 0).all() if pop.endswith("I") else (nz > 0).all()
+    # connectivity tracks the probability table (loose check)
+    p_l4e_l23e = mc.CONN_PROB[0, 2]
+    blk = w[off[0]:off[1], off[2]:off[3]]
+    got = (blk != 0).mean()
+    assert abs(got - p_l4e_l23e) < 0.05
+    # L4E -> L23E weights are doubled on average
+    other = w[off[0]:off[1], off[0]:off[1]]
+    if (blk != 0).any() and (other != 0).any():
+        assert blk[blk != 0].mean() > 1.5 * other[other != 0].mean()
+
+
+def test_partition_covers_all_fanout():
+    spec = mc.MicrocircuitSpec(scale=0.003)
+    w, is_inh = spec.weight_matrix()
+    part = network.build_partition(w, is_inh, n_shards=4)
+    shard_of = np.arange(part.n_neurons) // part.per_shard
+    nz = w != 0
+    for j in range(min(w.shape[1], 100)):
+        targets = set(np.unique(shard_of[: nz.shape[0]][nz[:, j]]))
+        listed = set(int(d) for d in part.fanout[j] if d >= 0)
+        assert targets <= listed
+
+
+def test_routing_tables_replicas():
+    spec = mc.MicrocircuitSpec(scale=0.003)
+    w, is_inh = spec.weight_matrix()
+    part = network.build_partition(w, is_inh, n_shards=4)
+    tabs = network.routing_tables_for_shard(part, shard=1)
+    max_fan = part.fanout.shape[1]
+    # replica k of local neuron a routes to fanout[global, k]
+    for a in (0, 3, 7):
+        g = part.per_shard + a
+        for k, d in enumerate(part.fanout[g]):
+            got = int(tabs.dest_of_addr[a * max_fan + k])
+            assert got == (int(d) if d >= 0 else -1)
+
+
+def test_traffic_matrix_no_self_traffic():
+    spec = mc.MicrocircuitSpec(scale=0.003)
+    w, is_inh = spec.weight_matrix()
+    part = network.build_partition(w, is_inh, n_shards=4)
+    rates = np.full(part.n_neurons, 5.0)
+    m = network.traffic_matrix(part, rates)
+    assert (np.diag(m) == 0).all()
+    assert m.sum() > 0

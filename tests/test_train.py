@@ -1,0 +1,211 @@
+"""Training stack tests: optimizer math, schedules, loss chunking,
+microbatching, trainer fault tolerance, data pipeline."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, RingPrefetcher, synthetic_batch
+from repro.models import build
+from repro.models.transformer import Runtime
+from repro.train import optimizer as opt
+from repro.train.step import (TrainConfig, chunked_xent, init_train_state,
+                              make_train_step)
+from repro.train.trainer import Trainer, TrainerConfig
+
+from prop import draw, given
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    cfg = opt.OptimizerConfig(
+        b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0, clip_norm=1e9,
+        schedule=opt.ScheduleConfig(kind="constant", peak_lr=0.1,
+                                    warmup_steps=0))
+    p = {"w": jnp.asarray([[1.0, 2.0]])}
+    g = {"w": jnp.asarray([[0.5, -0.5]])}
+    st = opt.adamw_init(p)
+    newp, st, _ = opt.adamw_update(g, st, p, cfg)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mh, vh = m / 0.1, v / 0.01
+    want = 1.0 - 0.1 * mh / (np.sqrt(vh) + 1e-8)
+    np.testing.assert_allclose(np.asarray(newp["w"])[0, 0], want, rtol=1e-5)
+
+
+def test_adamw_converges_quadratic():
+    cfg = opt.OptimizerConfig(
+        weight_decay=0.0, clip_norm=10.0,
+        schedule=opt.ScheduleConfig(kind="constant", peak_lr=0.05,
+                                    warmup_steps=0))
+    p = {"w": jnp.asarray([3.0, -2.0])}
+    st = opt.adamw_init(p)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st, _ = opt.adamw_update(g, st, p, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 1e-2
+
+
+def test_adafactor_converges_quadratic():
+    cfg = opt.OptimizerConfig(
+        kind="adafactor", weight_decay=0.0, clip_norm=10.0,
+        schedule=opt.ScheduleConfig(kind="constant", peak_lr=0.05,
+                                    warmup_steps=0))
+    p = {"w": jnp.ones((4, 3)) * 2.0}
+    st = opt.adafactor_init(p, cfg)
+    for _ in range(300):
+        g = {"w": 2 * p["w"]}
+        p, st, _ = opt.adafactor_update(g, st, p, cfg)
+    assert float(jnp.abs(p["w"]).max()) < 5e-2
+
+
+def test_adafactor_memory_is_factored():
+    cfg = opt.OptimizerConfig(kind="adafactor", momentum_dtype="bfloat16")
+    p = {"w": jnp.zeros((128, 64))}
+    st = opt.adafactor_init(p, cfg)
+    assert st.vr["w"].shape == (128,)
+    assert st.vc["w"].shape == (64,)
+    assert st.m["w"].dtype == jnp.bfloat16
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0, 4.0])}        # norm 5
+    clipped, norm = opt.clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-6
+    np.testing.assert_allclose(np.asarray(clipped["a"]), [0.6, 0.8], rtol=1e-5)
+
+
+def test_schedules():
+    wsd = opt.ScheduleConfig(kind="wsd", peak_lr=1.0, warmup_steps=10,
+                             total_steps=100, decay_frac=0.2, min_ratio=0.1)
+    assert float(opt.learning_rate(wsd, 0)) == 0.0
+    assert abs(float(opt.learning_rate(wsd, 10)) - 1.0) < 1e-6
+    assert abs(float(opt.learning_rate(wsd, 50)) - 1.0) < 1e-6   # stable
+    assert float(opt.learning_rate(wsd, 99)) < 0.2               # decaying
+    cos = opt.ScheduleConfig(kind="cosine", peak_lr=1.0, warmup_steps=0,
+                             total_steps=100, min_ratio=0.0)
+    assert abs(float(opt.learning_rate(cos, 100))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+@given(n_cases=8, b=draw.ints(1, 3), s=draw.ints(2, 8), v=draw.ints(8, 64),
+       seed=draw.ints(0, 1000))
+def test_chunked_xent_equals_full(b, s, v, seed):
+    s = s * 4                                   # divisible by chunk=4
+    cfg = reduced(get_config("qwen3_32b"))
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hidden = jax.random.normal(k1, (b, s, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(k2, (b, s), 0, cfg.vocab)
+    params = {"lm_head": jax.random.normal(
+        k3, (cfg.d_model, cfg.vocab)) * 0.02}
+    nll, _ = chunked_xent(params, hidden, labels, cfg, Runtime(), chunk=4)
+    logits = hidden @ params["lm_head"]
+    lse = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = jnp.mean(lse - gold)
+    np.testing.assert_allclose(float(nll), float(want), rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_xent_label_mask():
+    cfg = reduced(get_config("qwen3_32b"))
+    hidden = jnp.ones((1, 8, cfg.d_model))
+    params = {"lm_head": jnp.ones((cfg.d_model, cfg.vocab)) * 0.01}
+    labels = jnp.full((1, 8), -1)
+    nll, _ = chunked_xent(params, hidden, labels.at[0, 0].set(3), cfg,
+                          Runtime(), chunk=4)
+    assert np.isfinite(float(nll))
+
+
+def test_microbatch_equivalence():
+    """Gradient accumulation over 2 microbatches == full-batch gradients."""
+    cfg = reduced(get_config("minicpm_2b"))
+    m = build(cfg)
+    rt = Runtime()
+    base = TrainConfig(microbatch=0)
+    micro = TrainConfig(microbatch=2)
+    state = init_train_state(m, jax.random.PRNGKey(0), base)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab)}
+    batch["labels"] = batch["tokens"]
+    s1, m1 = jax.jit(make_train_step(m, base, rt))(state, batch)
+    state2 = init_train_state(m, jax.random.PRNGKey(0), base)
+    s2, m2 = jax.jit(make_train_step(m, micro, rt))(state2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+    a = jax.tree_util.tree_leaves(s1["params"])
+    b = jax.tree_util.tree_leaves(s2["params"])
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=3e-2, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# trainer: loss goes down, crash/restart resumes exactly
+# ---------------------------------------------------------------------------
+
+def test_trainer_loss_decreases_and_resumes():
+    cfg = reduced(get_config("minicpm_2b"))
+    m = build(cfg)
+    tcfg = TrainConfig(optimizer=opt.OptimizerConfig(
+        schedule=opt.ScheduleConfig(kind="wsd", peak_lr=3e-3, warmup_steps=5,
+                                    total_steps=40)))
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=4)
+    d = tempfile.mkdtemp()
+    try:
+        tr = Trainer(m, tcfg, dcfg,
+                     TrainerConfig(steps=20, ckpt_dir=d, ckpt_every=10,
+                                   log_every=5))
+        state, hist = tr.run(seed=0)
+        assert hist[-1]["loss"] < hist[0]["loss"]
+        # crash at step 25 after checkpoint at 20
+        tr2 = Trainer(m, tcfg, dcfg,
+                      TrainerConfig(steps=40, ckpt_dir=d, ckpt_every=10,
+                                    log_every=5, fail_at_step=25))
+        with pytest.raises(RuntimeError):
+            tr2.run(seed=0)
+        # restart resumes from 20 and completes
+        tr3 = Trainer(m, tcfg, dcfg,
+                      TrainerConfig(steps=40, ckpt_dir=d, ckpt_every=10,
+                                    log_every=5))
+        state3, _ = tr3.run(seed=0)
+        assert int(np.asarray(state3["step"])) == 40
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_synthetic_batch_deterministic():
+    dc = DataConfig(vocab=100, seq_len=16, global_batch=2)
+    b1 = synthetic_batch(dc, 7)
+    b2 = synthetic_batch(dc, 7)
+    assert (np.asarray(b1["tokens"]) == np.asarray(b2["tokens"])).all()
+    b3 = synthetic_batch(dc, 8)
+    assert not (np.asarray(b1["tokens"]) == np.asarray(b3["tokens"])).all()
+    # labels are next-token shifted
+    assert b1["tokens"].shape == (2, 16) and b1["labels"].shape == (2, 16)
+
+
+def test_prefetcher_order_and_credits():
+    dc = DataConfig(vocab=100, seq_len=8, global_batch=2, ring_slots=2)
+    pf = RingPrefetcher(dc, start_step=5)
+    try:
+        steps = [pf.next()[0] for _ in range(6)]
+        assert steps == [5, 6, 7, 8, 9, 10]
+        st = pf.stats()
+        assert st["consumed"] == 6
+        assert st["in_flight"] <= 2               # credit bound respected
+    finally:
+        pf.close()
