@@ -1,61 +1,68 @@
-"""Kernel microbenchmarks: Pallas (interpret) correctness-path cost vs the
-jnp reference paths on CPU, plus the kernels' modelled TPU arithmetic.
+"""Kernel microbenchmarks: the fused route+aggregate hot path vs the jnp
+reference paths on CPU, plus the kernels' modelled TPU arithmetic.
 
-NOTE: interpret-mode wall time is NOT TPU performance; the number that
-matters for the roofline is the bytes/flops model printed alongside.
+NOTE: Pallas interpret-mode wall time is NOT TPU performance (it executes
+the kernel body op-by-op in Python); the numbers that matter for the
+roofline are the compiled-XLA fused path and the bytes/flops model printed
+alongside.  All timed rows land in BENCH_kernels.json.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregator as agg
+from benchmarks.run import median_ms
 from repro.core import events as ev
 from repro.kernels import ops
 from repro.snn.lif import LIFParams, init_state
 
 
-def wall(fn, *args, iters=5):
-    jax.tree_util.tree_leaves(fn(*args))[0].block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.tree_util.tree_leaves(out)[0].block_until_ready()
-    return (time.perf_counter() - t0) / iters * 1e6
-
-
 def main(report):
+    smoke = getattr(report, "smoke", False)
     N, D, C = 4096, 64, 128
     k = jax.random.PRNGKey(0)
     words = ev.pack(jax.random.randint(k, (N,), 0, 1 << 12),
                     jax.random.randint(k, (N,), 0, 1 << 15))
     dests = jax.random.randint(jax.random.fold_in(k, 1), (N,), 0, D)
-    guids = jnp.zeros((N,), jnp.int32)
 
-    us_sort = wall(jax.jit(lambda: agg.aggregate(words, dests, guids, D, C,
-                                                 impl="sort")))
-    us_oh = wall(jax.jit(lambda: agg.aggregate(words, dests, guids, D, C,
-                                               impl="onehot")))
-    report("kernels/aggregate_sort_us", round(us_sort, 1), f"N={N} D={D}")
-    report("kernels/aggregate_onehot_us", round(us_oh, 1), f"N={N} D={D}")
-    # kernel VMEM/arithmetic model (TPU target)
-    vmem_kb = (N * 4 * 3 + 8 * C * 8) / 1024
-    report("kernels/bucket_scatter_vmem_KiB", round(vmem_kb, 1),
-           "events+dests+guids resident + (D_TILE,C) out block")
-    report("kernels/bucket_scatter_work", N * D * C,
-           "select-reduce ops (VPU int32)")
+    # aggregate impl sweep at a second capacity point (bench_aggregation
+    # owns the C=256 acceptance shape; one shared helper, two shapes)
+    from benchmarks.bench_aggregation import impl_walltimes
+    impl_walltimes(report, N, D, C)
 
-    n = 65536
+    # fused Pallas placement kernel (interpret on CPU -- correctness path;
+    # compiled on TPU); keep the shape tiny in smoke mode, it is slow.
+    if not smoke:
+        np_, dp, cp = 512, 16, 32
+        wp = words[:np_]
+        dp_arr = dests[:np_] % dp
+        ms = median_ms(jax.jit(lambda: ops.fused_scatter(
+            wp, dp_arr, jnp.zeros((np_,), jnp.int32), dp, cp)), iters=3)
+        report.bench("kernels", "fused_scatter_pallas_interpret",
+                     f"N{np_}_D{dp}_C{cp}", ms, events_per_s=np_ / ms * 1e3,
+                     notes="interpret mode, NOT TPU perf")
+
+    # kernel VMEM/arithmetic model (TPU target) for the fused path:
+    # sort O(N log N) + per-dest dynamic-slice placement O(D*C)
+    vmem_kb = (N * 4 * 2 + 8 * C * 8) / 1024
+    report("kernels/fused_route_bucket_vmem_KiB", round(vmem_kb, 1),
+           "sorted window + guid LUT resident + (D_TILE,C) out block")
+    work = int(N * np.log2(max(N, 2)) + D * C)
+    report("kernels/fused_route_bucket_work", work,
+           "sort compares + placement slots (was N*D*C one-hot reduce)")
+    report("kernels/bucket_scatter_work_legacy", N * D * C,
+           "seed kernel select-reduce ops, kept as cross-check")
+
+    n = 4096 if smoke else 65536
     p = LIFParams()
     st = init_state(n, p, jax.random.PRNGKey(1))
     exc = jax.random.uniform(jax.random.PRNGKey(2), (n,)) * 1000
     inh = jnp.zeros((n,))
     from repro.snn import lif as lif_mod
-    us_ref = wall(jax.jit(lambda s: lif_mod.step(s, p, exc, inh)), st)
-    report("kernels/lif_ref_us", round(us_ref, 1), f"N={n} fused jnp")
+    ms_ref = median_ms(jax.jit(lambda s: lif_mod.step(s, p, exc, inh)), st)
+    report.bench("kernels", "lif_step_ref", f"N{n}", ms_ref,
+                 events_per_s=n / ms_ref * 1e3, notes="fused jnp")
     hbm_bytes = n * 4 * (4 + 2 + 5)       # read 4 state + 2 input, write 5
     report("kernels/lif_step_hbm_bytes", hbm_bytes,
            f"-> {hbm_bytes / 819e9 * 1e9:.1f} ns roofline on v5e HBM")

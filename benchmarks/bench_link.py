@@ -15,10 +15,42 @@ from repro.core import torus
 from repro.snn import microcircuit as mc
 
 
+def exchange_walltime(report, n_events: int = 4096, capacity: int = 256):
+    """Wall-clock of one full software flush window (fused route+aggregate
+    + packed single all_to_all + multicast decode) on the local mesh."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.run import median_ms
+    from repro.core import routing as rt
+    from repro.core.exchange import make_exchange
+
+    n_shards = 1                           # in-process mesh: 1 host device
+    n_addr = 1 << 12
+    mesh = jax.make_mesh((n_shards,), ("wafer",))
+    projs = [rt.Projection(a, a + 1, dest_node=a % n_shards,
+                           dest_links=[a % 8]) for a in range(n_addr)]
+    t = rt.build_tables(n_addr, projs)
+    tabs = rt.RoutingTables(t.dest_of_addr[None], t.guid_of_addr[None],
+                            t.mcast_of_guid[None])
+    k = jax.random.PRNGKey(0)
+    words = ev.pack(jax.random.randint(k, (n_shards, n_events), 0, n_addr),
+                    jax.random.randint(jax.random.fold_in(k, 1),
+                                       (n_shards, n_events), 0, 1 << 15))
+    run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=capacity,
+                        n_addr_per_shard=n_addr)
+    ms = median_ms(lambda: run(words, tabs))
+    report.bench("link", "exchange_window",
+                 f"S{n_shards}_N{n_events}_C{capacity}", ms,
+                 events_per_s=n_events / ms * 1e3,
+                 notes="fused route+aggregate, one packed all_to_all")
+
+
 def main(report):
     link_bytes = torus.LINK_GBYTES * 1e9
     report("link/raw_GBps", round(torus.LINK_GBYTES, 2),
            "12 lanes x 8.4 Gbit/s")
+
+    exchange_walltime(report)
 
     # full-scale microcircuit: 77k neurons, mean rate ~4 Hz biological;
     # BrainScaleS runs at 1e3-1e4 x biological speedup.

@@ -1,7 +1,15 @@
 """Benchmark harness — one module per paper table/claim.
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>]
-Output: ``name,value,notes`` CSV rows on stdout.
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>] [--smoke]
+                                                [--out-dir DIR]
+Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
+``BENCH_<group>.json`` files (one JSON list of
+``{op, shape, median_ms, events_per_s}`` rows per group, currently
+``kernels`` and ``link``) so the perf trajectory across PRs can be diffed
+without parsing the CSV.
+
+``--smoke`` runs a reduced module set with shrunk shapes — fast enough for
+the tier-1 time budget while still producing both JSON files.
 
 Modules:
   bench_aggregation  paper §3.1 throughput claims (the central table)
@@ -15,6 +23,8 @@ Modules:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -28,24 +38,77 @@ MODULES = [
     "bench_kernels",
 ]
 
+SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels"]
+
+
+def median_ms(fn, *args, iters: int = 15) -> float:
+    """Median wall-clock of ``fn(*args)`` in ms (one warmup, then iters)."""
+    import jax
+    jax.tree_util.tree_leaves(fn(*args))[0].block_until_ready()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e3
+
+
+class Reporter:
+    """CSV reporter (the historical ``report(name, value, notes)`` callable)
+    plus a structured ``bench()`` collector feeding BENCH_<group>.json.
+    Modules consult ``.smoke`` to shrink their workload."""
+
+    def __init__(self, smoke: bool = False):
+        self.smoke = smoke
+        self._groups: dict[str, list[dict]] = {}
+
+    def __call__(self, name, value, notes=""):
+        print(f"{name},{value},{notes}")
+        sys.stdout.flush()
+
+    def bench(self, group: str, op: str, shape: str, med_ms: float,
+              events_per_s: float | None = None, notes: str = ""):
+        row = {"op": op, "shape": shape, "median_ms": round(med_ms, 6)}
+        if events_per_s is not None:
+            row["events_per_s"] = round(events_per_s)
+        if notes:
+            row["notes"] = notes
+        self._groups.setdefault(group, []).append(row)
+        extra = f"{row.get('events_per_s', '')} ev/s {notes}".strip()
+        self(f"{group}/{op}/{shape}/median_ms", round(med_ms, 4), extra)
+
+    def dump(self, out_dir: str):
+        for group, rows in self._groups.items():
+            path = os.path.join(out_dir, f"BENCH_{group}.json")
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=1)
+                f.write("\n")
+            print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast reduced run (tier-1 time budget)")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<group>.json files")
     args = ap.parse_args()
 
-    def report(name, value, notes=""):
-        print(f"{name},{value},{notes}")
-        sys.stdout.flush()
+    report = Reporter(smoke=args.smoke)
+    modules = SMOKE_MODULES if args.smoke else MODULES
 
     print("name,value,notes")
-    for mod_name in MODULES:
+    for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue
         mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
         t0 = time.perf_counter()
         mod.main(report)
         report(f"{mod_name}/_wall_s", round(time.perf_counter() - t0, 1))
+    report.dump(args.out_dir)
 
 
 if __name__ == "__main__":

@@ -9,16 +9,21 @@ network destination into fixed-capacity buckets, which then feed a single
 uses, and `repro.models.moe` reuses exactly this code with experts as
 destinations.
 
-Two implementations with identical semantics (checked against each other and
+Implementations with identical semantics (checked against each other and
 against the cycle model in tests):
 
 * ``aggregate_onehot`` — O(N·D) one-hot cumsum; tiny and fusion-friendly,
-  best when D (destinations visible to one shard) is small.
-* ``aggregate_sort``   — O(N log N) stable sort by destination; best when D
-  is large or N >> D.
+  the original reference formulation.
+* ``aggregate_sort``   — O(N log N) argsort by destination; kept as an
+  independently-written cross-check.
+* ``impl="fused"``     — the fast path: one stable multi-operand
+  ``lax.sort`` + gather placement (``repro.kernels.fused_route_bucket``),
+  ~an order of magnitude faster than ``onehot`` on CPU at window scale.
+* ``impl="pallas"``    — same math with the placement stage in the Pallas
+  TPU kernel (compiled on TPU, interpret elsewhere).
 
-Plus a Pallas kernel path in ``repro.kernels.bucket_scatter`` selected via
-``aggregate(..., impl="pallas")``.
+``impl="auto"`` picks ``pallas`` where the kernel compiles (TPU) and
+``fused`` everywhere else.
 
 Semantics: events are processed in window order; for each destination the
 first ``capacity`` events are placed at slots 0..k-1 of its bucket, events
@@ -109,20 +114,28 @@ def aggregate(words: jax.Array, dest: jax.Array, guids: jax.Array | None,
               n_dest: int, capacity: int, impl: str = "auto") -> Buckets:
     """Bin a window of events into per-destination buckets.
 
-    impl: "onehot" | "sort" | "pallas" | "auto" (sort if n_dest > 128).
+    impl: "onehot" | "sort" | "fused" | "pallas" | "auto".
+    "auto" selects the compiled Pallas kernel on TPU and the fused
+    sort-based XLA path elsewhere (both beat onehot/sort by a wide margin
+    at window scale; the quadratic impls remain as cross-check oracles).
     """
     if guids is None:
         guids = jnp.zeros_like(words, dtype=jnp.int32)
     dest = dest.astype(jnp.int32)
     if impl == "auto":
-        impl = "sort" if n_dest > 128 else "onehot"
+        from repro.kernels import dispatch
+        impl = "pallas" if dispatch.use_pallas() else "fused"
     if impl == "onehot":
         return aggregate_onehot(words, dest, guids, n_dest, capacity)
     if impl == "sort":
         return aggregate_sort(words, dest, guids, n_dest, capacity)
+    if impl == "fused":
+        from repro.kernels import fused_route_bucket as frb
+        return frb.fused_aggregate(words, dest, guids, n_dest, capacity,
+                                   use_pallas=False).buckets
     if impl == "pallas":
         from repro.kernels import ops as kops
-        return kops.bucket_scatter(words, dest, guids, n_dest, capacity)
+        return kops.fused_scatter(words, dest, guids, n_dest, capacity)
     raise ValueError(f"unknown impl {impl!r}")
 
 

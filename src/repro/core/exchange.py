@@ -2,18 +2,21 @@
 
 One "wafer shard" per mesh device along a named axis.  A flush window is:
 
-  1. **route**   — per-shard source lookup: pulse address -> (destination
-                   shard, GUID)                                   (§3, LUT 1)
-  2. **aggregate** — destination-bucketed binning with static capacity
-                   (the paper's buckets; capacity = multiples of the 124
-                   event Extoll payload)                          (§3.1)
-  3. **all_to_all** — one collective ships every bucket to its owner; this
-                   is the TPU ICI playing the Extoll torus's role
-  4. **multicast** — destination-side GUID lookup -> multicast mask,
+  1. **route+aggregate** — the fused window kernel
+                   (``repro.kernels.fused_route_bucket``): source LUT
+                   lookup (§3, LUT 1) and destination-bucketed binning with
+                   static capacity (§3.1) in one sort-based pass
+  2. **all_to_all** — ONE collective per window ships every bucket to its
+                   owner: events, guids and counts are packed into a single
+                   (n_shards, 2·capacity+1) u32 buffer so the latency-bound
+                   ICI hop is paid once, exactly like the paper amortizes
+                   the Extoll packet header across a full bucket
+  3. **multicast** — destination-side GUID lookup -> multicast mask,
                    replaying events onto local HICANN links       (§3, LUT 2)
 
-All four stages run inside ``shard_map`` so the collective is explicit and
-the roofline's collective term can be read straight off the HLO.
+All stages run inside ``shard_map`` so the collective is explicit — the
+lowered HLO contains exactly one all-to-all per flush window, and the
+roofline's collective term can be read straight off it.
 
 Overflow policy: events beyond a bucket's capacity in one window are
 *carried over* to the next window through a per-shard residue buffer —
@@ -31,6 +34,27 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregator, events as ev
 from repro.core.routing import RoutingTables
+
+
+def pack_buckets(data: jax.Array, guids: jax.Array,
+                 counts: jax.Array) -> jax.Array:
+    """Pack (D, C) events + (D, C) guids + (D,) counts into one u32 buffer.
+
+    Layout per destination row: ``[data | guids | count]`` -> (D, 2C+1).
+    Bitcasts (not converts) keep negative guid sentinels exact on the wire.
+    """
+    gu = jax.lax.bitcast_convert_type(guids, jnp.uint32)
+    cn = jax.lax.bitcast_convert_type(counts, jnp.uint32)[:, None]
+    return jnp.concatenate([data, gu, cn], axis=1)
+
+
+def unpack_buckets(buf: jax.Array, capacity: int):
+    """Inverse of :func:`pack_buckets` -> (data, guids, counts)."""
+    data = buf[:, :capacity]
+    guids = jax.lax.bitcast_convert_type(buf[:, capacity:2 * capacity],
+                                         jnp.int32)
+    counts = jax.lax.bitcast_convert_type(buf[:, 2 * capacity], jnp.int32)
+    return data, guids, counts
 
 
 class ExchangeOut(NamedTuple):
@@ -58,28 +82,31 @@ def exchange_window(
     """One flush window of the spike fabric; call inside shard_map."""
     my = jax.lax.axis_index(axis_name)
 
-    # 1. route (source LUT)
-    dest, guid, routed = tables.route(words)
-    words = jnp.where(routed, words, ev.INVALID_EVENT)
+    # 1. fused route + aggregate (the paper's LUT 1 + §3.1 buckets)
+    if impl in ("auto", "fused", "pallas"):
+        from repro.kernels import fused_route_bucket as frb
+        use_pallas = None if impl == "auto" else (impl == "pallas")
+        b = frb.fused_route_aggregate(
+            words, tables.dest_of_addr, tables.guid_of_addr, n_shards,
+            capacity, use_pallas=use_pallas).buckets
+    else:   # reference impls, route + aggregate staged separately
+        dest, guid, routed = tables.route(words)
+        words = jnp.where(routed, words, ev.INVALID_EVENT)
+        b = aggregator.aggregate(words, dest, guid, n_shards, capacity,
+                                 impl=impl)
 
-    # 2. aggregate into per-destination buckets (the paper's §3.1)
-    b = aggregator.aggregate(words, dest, guid, n_shards, capacity, impl=impl)
-
-    # 3. one all_to_all ships every bucket to its owner shard
-    recv_events = jax.lax.all_to_all(b.data, axis_name, 0, 0, tiled=True)
-    recv_events = recv_events.reshape(n_shards, capacity)
-    recv_guids = jax.lax.all_to_all(b.guids, axis_name, 0, 0, tiled=True)
-    recv_guids = recv_guids.reshape(n_shards, capacity)
-    recv_counts = jax.lax.all_to_all(
-        b.counts.reshape(n_shards, 1), axis_name, 0, 0, tiled=True
-    ).reshape(n_shards)
+    # 2. ONE all_to_all ships every bucket (events+guids+counts packed)
+    packed = pack_buckets(b.data, b.guids, b.counts)
+    recv = jax.lax.all_to_all(packed, axis_name, 0, 0, tiled=True)
+    recv = recv.reshape(n_shards, 2 * capacity + 1)
+    recv_events, recv_guids, recv_counts = unpack_buckets(recv, capacity)
 
     # mask out slots beyond the per-source count
     slot = jnp.arange(capacity)[None, :]
     live = slot < recv_counts[:, None]
     recv_events = jnp.where(live, recv_events, ev.INVALID_EVENT)
 
-    # 4. destination-side GUID -> multicast mask -> local links
+    # 3. destination-side GUID -> multicast mask -> local links
     flat_ev = recv_events.reshape(-1)
     flat_gu = jnp.where(live, recv_guids, -1).reshape(-1)
     masks = tables.multicast(flat_gu)

@@ -43,9 +43,11 @@ def compressed_psum(g, err, axis_names):
 
     Returns (g_reduced_mean, new_err).
     """
+    # axis size via psum of a unit (jax.lax has no static axis-size query
+    # inside shard_map in this JAX version); only used in float math below
     n = 1
     for a in axis_names:
-        n *= jax.lax.axis_size(a)
+        n *= jax.lax.psum(1, a)
     q, scale, new_err = quantize(g, err)
     q_sum = q.astype(jnp.int32)
     s_sum = scale

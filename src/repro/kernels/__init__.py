@@ -1,4 +1,7 @@
 """Pallas TPU kernels for the paper's compute hot-spots:
-bucket_scatter (event aggregation §3.1) and lif_step (workload inner loop).
-Each has a pure-jnp oracle in ref.py; validated in interpret mode on CPU."""
-from repro.kernels import ops, ref  # noqa: F401
+fused_route_bucket (fused routing + event aggregation §3/§3.1, the hot
+path), bucket_scatter (legacy one-hot aggregation kernel, cross-check) and
+lif_step (workload inner loop).  Each has a pure-jnp oracle in ref.py;
+backend dispatch (compiled TPU vs interpret/XLA fallback) is centralised in
+dispatch.py."""
+from repro.kernels import dispatch, ops, ref  # noqa: F401

@@ -58,9 +58,15 @@ def _kernel(words_ref, dests_ref, guids_ref,
 
 
 def bucket_scatter_pallas(words, dests, guids, n_dest: int, capacity: int,
-                          interpret: bool = True):
+                          interpret: bool | None = None):
     """Raw kernel launch. Returns (data (D,C) u32, guids (D,C) i32,
-    raw_counts (D,) i32 — counts are pre-clip, overflow = counts - clip)."""
+    raw_counts (D,) i32 — counts are pre-clip, overflow = counts - clip).
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere.
+    """
+    if interpret is None:
+        from repro.kernels.dispatch import default_interpret
+        interpret = default_interpret()
     n = words.shape[0]
     d_pad = -(-n_dest // D_TILE) * D_TILE
     grid = (d_pad // D_TILE,)

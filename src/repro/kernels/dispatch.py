@@ -1,0 +1,51 @@
+"""Backend dispatch for the Pallas kernels.
+
+One policy, used by every kernel wrapper:
+
+* On TPU the kernels compile (``interpret=False``) — that is the whole
+  point of writing them in Pallas.
+* On CPU/GPU hosts the Pallas bodies run in *interpret* mode, which is a
+  correctness tool, not a fast path; performance-sensitive call sites
+  therefore auto-select a pure-XLA implementation of the same math
+  (``use_pallas() is False``) and only exercise interpret mode in tests.
+
+``REPRO_PALLAS_INTERPRET`` overrides both decisions (``0`` forces compiled
+Pallas, ``1`` forces interpret mode) so a TPU host can still run the
+interpreter for debugging and CI can pin behaviour.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def _env_override() -> bool | None:
+    v = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if v is None:
+        return None
+    return v != "0"
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernel bodies? Compiled on TPU, interpret elsewhere."""
+    env = _env_override()
+    if env is not None:
+        return env
+    return not on_tpu()
+
+
+def use_pallas() -> bool:
+    """Should auto-dispatch route hot paths through the Pallas kernels?
+
+    True only where the kernel actually compiles: TPU, or an explicit
+    ``REPRO_PALLAS_INTERPRET=0`` override.
+    """
+    env = _env_override()
+    if env is not None:
+        return not env
+    return on_tpu()

@@ -1,0 +1,246 @@
+"""Fused route+aggregate flush-window kernel (paper §3, §3.1 in one pass).
+
+The seed hot path was three separate stages — routing-LUT gather, then an
+O(N·D·C) per-destination one-hot reduce (``bucket_scatter.py``), then the
+collective — and the Pallas kernel only ever ran in interpret mode.  This
+module replaces the compute side with a sort-based formulation:
+
+  1. **route**   — ``dest = dest_lut[addr]`` gather, validity from the
+                   event's valid bit and ``NO_ROUTE`` (LUT 1 of the paper)
+  2. **rank**    — one stable multi-operand ``lax.sort`` by destination
+                   groups each destination's events contiguously in window
+                   order: O(N log N), and the slot of an event is simply its
+                   offset from the first event of its destination
+  3. **place**   — each destination's bucket row is a *dynamic slice* of
+                   the sorted window (O(D·C) total, no scatter); the
+                   destination-GUID lookup (LUT 1's second output) is fused
+                   into placement so only the ≤ C accepted events per
+                   destination are gathered, not all N
+  4. **residue** — events beyond a bucket's capacity are compacted into a
+                   fixed-size carry buffer re-offered next window (the
+                   FPGA's back-pressure on the HICANN links)
+
+Stage 3 is a Pallas TPU kernel (grid over destination tiles, per-row
+``pl.ds`` loads from the VMEM-resident sorted window, in-kernel guid-LUT
+gather).  Backend dispatch is automatic (``kernels.dispatch``): compiled
+Pallas on TPU, pure-XLA placement on CPU/GPU where interpret mode would be
+a correctness tool rather than a fast path; tests exercise the interpret
+path explicitly against the ``ref.py`` oracle.
+
+The destination gather (stage 1) stays in XLA because it *produces the sort
+key*; fusing it into the placement kernel would force the sort inside the
+kernel, which TPU Pallas cannot lower.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.core import events as ev
+from repro.core.aggregator import Buckets
+from repro.kernels import dispatch
+
+D_TILE = 8
+
+
+class FusedWindow(NamedTuple):
+    """Result of one fused route+aggregate window.
+
+    buckets:  the standard ``aggregator.Buckets`` (data/guids/counts/overflow)
+    residue:  (residue_len,) u32 deferred events, window-grouped, INVALID-padded
+    deferred: () i32 events carried to the next window via ``residue``
+    dropped:  () i32 overflow events that did not fit the residue buffer
+    offered:  () i32 valid routed events offered this window
+    """
+
+    buckets: Buckets
+    residue: jax.Array
+    deferred: jax.Array
+    dropped: jax.Array
+    offered: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Pallas placement kernels — stage 3.
+# ---------------------------------------------------------------------------
+
+def _row(words_ref, start, capacity):
+    return words_ref[pl.ds(start, capacity)].reshape(1, capacity)
+
+
+def _place_kernel(first_ref, counts_ref, words_ref, guids_ref,
+                  data_ref, gout_ref, *, capacity: int, d_tile: int):
+    """Explicit per-event guids travelled through the sort with the words."""
+    slot = lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    for d in range(d_tile):
+        start = first_ref[d]
+        live = slot < jnp.minimum(counts_ref[d], capacity)
+        w = _row(words_ref, start, capacity)
+        g = _row(guids_ref, start, capacity)
+        data_ref[d, :] = jnp.where(live, w, jnp.uint32(0)).reshape(capacity)
+        gout_ref[d, :] = jnp.where(live, g, 0).reshape(capacity)
+
+
+def _place_route_kernel(first_ref, counts_ref, words_ref, lut_ref,
+                        data_ref, gout_ref, *, capacity: int, d_tile: int):
+    """Guid-LUT variant: the LUT gather happens *inside* the kernel and only
+    touches the ≤ capacity accepted events of each destination row."""
+    slot = lax.broadcasted_iota(jnp.int32, (1, capacity), 1)
+    n_lut = lut_ref.shape[0]
+    for d in range(d_tile):
+        start = first_ref[d]
+        live = slot < jnp.minimum(counts_ref[d], capacity)
+        w = jnp.where(live, _row(words_ref, start, capacity), jnp.uint32(0))
+        addr = ((w >> ev.TS_BITS) & ev.ADDR_MASK).astype(jnp.int32)
+        g = jnp.take(lut_ref[...], jnp.minimum(addr, n_lut - 1).reshape(capacity))
+        data_ref[d, :] = w.reshape(capacity)
+        gout_ref[d, :] = jnp.where(live.reshape(capacity), g, 0)
+
+
+def _placement_pallas(first, counts, swords_pad, aux, n_dest: int,
+                      capacity: int, *, routed: bool, interpret: bool):
+    """Launch the placement kernel over ceil(n_dest / D_TILE) dest tiles."""
+    d_pad = -(-n_dest // D_TILE) * D_TILE
+    first = jnp.pad(first, (0, d_pad - n_dest))
+    counts = jnp.pad(counts, (0, d_pad - n_dest))
+    n_pad = swords_pad.shape[0]
+    kernel = functools.partial(
+        _place_route_kernel if routed else _place_kernel,
+        capacity=capacity, d_tile=D_TILE)
+    tile = lambda i: (i,)
+    full = lambda i: (0,)
+    data, gout = pl.pallas_call(
+        kernel,
+        grid=(d_pad // D_TILE,),
+        in_specs=[
+            pl.BlockSpec((D_TILE,), tile),
+            pl.BlockSpec((D_TILE,), tile),
+            pl.BlockSpec((n_pad,), full),
+            pl.BlockSpec((aux.shape[0],), full),
+        ],
+        out_specs=(
+            pl.BlockSpec((D_TILE, capacity), lambda i: (i, 0)),
+            pl.BlockSpec((D_TILE, capacity), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((d_pad, capacity), jnp.uint32),
+            jax.ShapeDtypeStruct((d_pad, capacity), jnp.int32),
+        ),
+        interpret=interpret,
+    )(first, counts, swords_pad, aux)
+    return data[:n_dest], gout[:n_dest]
+
+
+# ---------------------------------------------------------------------------
+# XLA placement — same math, used where Pallas would only interpret.
+# ---------------------------------------------------------------------------
+
+def _placement_jnp(first, counts, swords_pad, aux, n_dest: int, capacity: int,
+                   *, routed: bool):
+    slot = jnp.arange(capacity)[None, :]
+    live = slot < jnp.minimum(counts, capacity)[:, None]
+    idx = first[:, None] + slot                      # swords_pad absorbs idx<=n+C
+    data = jnp.where(live, swords_pad[idx], jnp.uint32(0))
+    if routed:
+        addr = ev.address(data).astype(jnp.int32)
+        g = jnp.take(aux, jnp.minimum(addr, aux.shape[0] - 1))
+    else:
+        g = aux[idx]
+    return data, jnp.where(live, g, 0)
+
+
+# ---------------------------------------------------------------------------
+# Fused op.
+# ---------------------------------------------------------------------------
+
+def _finish(skey, swords, aux, n_dest: int, capacity: int, residue_len: int,
+            *, routed: bool, use_pallas: bool | None, interpret: bool | None):
+    n = swords.shape[0]
+    edges = jnp.searchsorted(skey, jnp.arange(n_dest + 1, dtype=skey.dtype))
+    first = edges[:-1].astype(jnp.int32)
+    counts = (edges[1:] - edges[:-1]).astype(jnp.int32)
+    swords_pad = jnp.concatenate(
+        [swords, jnp.full((capacity,), ev.INVALID_EVENT)])
+    if use_pallas is None:
+        use_pallas = dispatch.use_pallas()
+    if interpret is None:
+        interpret = dispatch.default_interpret()
+    if not routed:
+        aux = jnp.concatenate([aux, jnp.zeros((capacity,), aux.dtype)])
+    if use_pallas:
+        data, gui = _placement_pallas(first, counts, swords_pad, aux, n_dest,
+                                      capacity, routed=routed,
+                                      interpret=interpret)
+    else:
+        data, gui = _placement_jnp(first, counts, swords_pad, aux, n_dest,
+                                   capacity, routed=routed)
+    accepted = jnp.minimum(counts, capacity)
+    offered = jnp.sum(counts).astype(jnp.int32)
+    overflow = (offered - jnp.sum(accepted)).astype(jnp.int32)
+    buckets = Buckets(data, gui, accepted, overflow)
+
+    if residue_len:
+        # overflow events = sorted index >= first-of-dest + capacity
+        first_of = jnp.take(first, jnp.minimum(skey, n_dest - 1))
+        pos = jnp.arange(n, dtype=jnp.int32) - first_of
+        ovf = (skey < n_dest) & (pos >= capacity)
+        _, rwords = lax.sort(
+            (jnp.where(ovf, 0, 1).astype(jnp.int32), swords),
+            num_keys=1, is_stable=True)
+        r = min(residue_len, n)
+        deferred = jnp.minimum(overflow, r)
+        res = jnp.where(jnp.arange(r) < deferred, rwords[:r], ev.INVALID_EVENT)
+        if residue_len > n:
+            res = jnp.concatenate(
+                [res, jnp.full((residue_len - n,), ev.INVALID_EVENT)])
+        dropped = overflow - deferred
+    else:
+        res = jnp.zeros((0,), jnp.uint32)
+        deferred = jnp.zeros((), jnp.int32)
+        dropped = overflow
+    return FusedWindow(buckets, res, deferred.astype(jnp.int32),
+                       dropped.astype(jnp.int32), offered)
+
+
+def fused_aggregate(words, dest, guids, n_dest: int, capacity: int, *,
+                    residue_len: int = 0, use_pallas: bool | None = None,
+                    interpret: bool | None = None) -> FusedWindow:
+    """Sort-based aggregation with explicit per-event destinations/guids.
+
+    Drop-in (via ``.buckets``) for ``aggregator.aggregate`` semantics:
+    window order within each destination, capacity clip, invalid events
+    (valid bit clear or dest out of range) ignored.
+    """
+    dest = dest.astype(jnp.int32)
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    key = jnp.where(valid, dest, n_dest)
+    skey, swords, sguids = lax.sort((key, words, guids.astype(jnp.int32)),
+                                    num_keys=1, is_stable=True)
+    return _finish(skey, swords, sguids, n_dest, capacity, residue_len,
+                   routed=False, use_pallas=use_pallas, interpret=interpret)
+
+
+def fused_route_aggregate(words, dest_lut, guid_lut, n_dest: int,
+                          capacity: int, *, residue_len: int = 0,
+                          use_pallas: bool | None = None,
+                          interpret: bool | None = None) -> FusedWindow:
+    """Routing-LUT gather + capacity-bounded binning in one fused pass.
+
+    ``dest_lut``/``guid_lut`` are ``RoutingTables.dest_of_addr`` /
+    ``.guid_of_addr`` (same clamped-index semantics as ``tables.route``).
+    The guid gather runs inside the placement kernel over accepted events
+    only.
+    """
+    addr = ev.address(words).astype(jnp.int32)
+    dest = jnp.take(dest_lut, jnp.minimum(addr, dest_lut.shape[0] - 1))
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    key = jnp.where(valid, dest, n_dest).astype(jnp.int32)
+    skey, swords = lax.sort((key, words), num_keys=1, is_stable=True)
+    return _finish(skey, swords, guid_lut.astype(jnp.int32), n_dest, capacity,
+                   residue_len, routed=True, use_pallas=use_pallas,
+                   interpret=interpret)

@@ -1,13 +1,13 @@
 """Jitted public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True because this container is CPU-only (the
-kernels TARGET TPU; interpret mode executes the kernel body in Python for
-correctness validation).  On real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+``interpret`` is auto-selected per backend (``kernels.dispatch``): the
+kernels compile on TPU; on CPU/GPU hosts the interpreter executes the
+kernel body in Python for correctness validation.  Override with
+``REPRO_PALLAS_INTERPRET`` (``0`` forces compiled, ``1`` forces interpret).
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
@@ -15,28 +15,43 @@ import jax.numpy as jnp
 from repro.core import events as ev
 from repro.core.aggregator import Buckets
 from repro.kernels.bucket_scatter import bucket_scatter_pallas
+from repro.kernels.dispatch import default_interpret
 from repro.kernels.lif_step import lif_step_pallas
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+# NOTE: default_interpret() is called lazily inside each wrapper, never at
+# module scope — importing repro.kernels must not initialize the JAX
+# backend (callers may still want jax.distributed.initialize() etc.), and
+# a late REPRO_PALLAS_INTERPRET change should affect every path alike.
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4))
 def bucket_scatter(words, dests, guids, n_dest: int, capacity: int) -> Buckets:
-    """Drop-in for ``core.aggregator.aggregate`` (impl='pallas')."""
+    """Legacy O(N·D·C) one-hot kernel, kept as an independent cross-check."""
     valid = ev.is_valid(words) & (dests >= 0) & (dests < n_dest)
     dests_m = jnp.where(valid, dests, -1).astype(jnp.int32)
     data, gout, raw = bucket_scatter_pallas(
-        words, dests_m, guids, n_dest, capacity, interpret=INTERPRET)
+        words, dests_m, guids, n_dest, capacity, interpret=default_interpret())
     accepted = jnp.minimum(raw, capacity)
     overflow = jnp.sum(raw - accepted).astype(jnp.int32)
     return Buckets(data, gout, accepted, overflow)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def fused_scatter(words, dests, guids, n_dest: int, capacity: int) -> Buckets:
+    """Drop-in for ``core.aggregator.aggregate`` (impl='pallas'): sort-based
+    slot assignment with the placement stage in the fused Pallas kernel."""
+    from repro.kernels import fused_route_bucket as frb
+    return frb.fused_aggregate(words, dests, guids, n_dest, capacity,
+                               use_pallas=True,
+                               interpret=default_interpret()).buckets
 
 
 @jax.jit
 def ssd_chunk(x, dt, A, B, C, s_prev):
     """One Mamba-2 SSD chunk via the Pallas kernel (f32 outputs)."""
     from repro.kernels.ssd_chunk import ssd_chunk_pallas
-    return ssd_chunk_pallas(x, dt, A, B, C, s_prev, interpret=INTERPRET)
+    return ssd_chunk_pallas(x, dt, A, B, C, s_prev,
+                            interpret=default_interpret())
 
 
 @functools.partial(jax.jit, static_argnums=(1,))
@@ -52,7 +67,7 @@ def lif_step(state, params, exc_in, inh_in, i_ext=0.0):
                          pz(state.refrac, 1))
         exc_in, inh_in = pz(exc_in), pz(inh_in)
     st, spk = lif_step_pallas(state, params, exc_in, inh_in, i_ext,
-                              interpret=INTERPRET)
+                              interpret=default_interpret())
     if pad:
         st = LIFState(st.v[:n], st.i_exc[:n], st.i_inh[:n], st.refrac[:n])
         spk = spk[:n]

@@ -32,6 +32,25 @@ def bucket_scatter_ref(words, dests, guids, n_dest: int, capacity: int):
     return data, gout.astype(jnp.int32), counts
 
 
+def fused_route_aggregate_ref(words, dest_lut, guid_lut, n_dest: int,
+                              capacity: int):
+    """Obviously-correct oracle for the fused route+aggregate kernel.
+
+    Routes via the clamped-index LUT semantics of ``RoutingTables.route``
+    and reuses the O(N·D·C) binning oracle above.  Returns
+    (data (D, C) u32, guids (D, C) i32, raw_counts (D,) i32).
+    """
+    from repro.core import events as ev
+    addr = ev.address(words).astype(jnp.int32)
+    idx = jnp.minimum(addr, dest_lut.shape[0] - 1)
+    dest = jnp.take(dest_lut, idx)
+    guid = jnp.take(guid_lut, idx).astype(jnp.int32)
+    valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
+    dm = jnp.where(valid, dest, -1)
+    wm = jnp.where(valid, words, jnp.uint32(0))
+    return bucket_scatter_ref(wm, dm, guid, n_dest, capacity)
+
+
 def lif_step_ref(state: LIFState, p: LIFParams, exc_in, inh_in, i_ext):
     """The SNN substrate's own step function is the oracle."""
     st, spk = lif_mod.step(state, p, exc_in, inh_in, i_ext)

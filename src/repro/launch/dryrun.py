@@ -275,7 +275,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         fn, args, shardings, model = build_decode_cell(
             cfg, shape, mesh, moe_impl, rules, split_kv)
 
-    with jax.set_mesh(mesh):
+    with mesh:   # Mesh is its own context manager (no jax.set_mesh here)
         # donate the mutable state: train state / KV caches update in place
         donate = {"train": (0,), "prefill": (2,), "decode": (1,)}[shape.kind]
         jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)

@@ -116,10 +116,12 @@ def moe_layer_bucket(x, params, moe: MoEConfig, *, axis: str = "model",
     Expert weights arrive pre-sliced over ``axis``: (E/ep, d, f).
     Router weights arrive full (replicated).
     """
-    ep = jax.lax.axis_size(axis)
     T, d = x.shape
     E = moe.n_experts
-    e_loc = E // ep
+    # EP degree from the pre-sliced expert weights: reshape sizes must be
+    # static, and jax.lax has no static axis-size query inside shard_map.
+    e_loc = params["w_gate"].shape[0]
+    ep = E // e_loc
     gate, experts, stats = _route(x, params["router"], moe, key)
     C = capacity or _capacity(T, moe.top_k, E, moe.capacity_factor)
     flat_e = experts.reshape(-1)

@@ -6,17 +6,31 @@ still reach its destination before its timestamp deadline — this is exactly
 the deadline-flush condition of the paper's buckets, applied at the system
 level (the same trick NEST/SpiNNaker use: communicate every min-delay).
 
-Per window and shard:
-  1. ``lax.scan`` the LIF dynamics ``window`` steps, reading scheduled
-     synaptic input from a delay ring and recording local spikes,
-  2. compact spikes into packed events (addr = local id x fan + replica,
-     ts = step + axonal delay), route via the shard's LUT,
-  3. one bucket-aggregated ``all_to_all`` (repro.core.exchange),
-  4. decode received events, scatter weighted synaptic input into the
-     delay ring at each event's deadline slot.
+The window loop is a **software-pipelined ``lax.scan``**: the carry holds,
+besides the neuron/ring state, the *pending* aggregated buckets of the
+previous window and a double-buffered overflow **residue**.  Iteration k:
+
+  1. exchange+decode window k-1's pending buckets (ONE packed
+     ``all_to_all`` — events and counts travel in the same buffer) and
+     scatter their weighted input into the delay ring; this happens at the
+     same systemtime as the unpipelined formulation (the start of window k
+     == the end of window k-1), so deadline semantics are unchanged,
+  2. ``lax.scan`` the LIF dynamics ``window`` steps off the ring,
+  3. compact spikes into packed events, append the residue deferred from
+     window k-1 (the FPGA's back-pressure on the HICANN links), and run the
+     fused route+aggregate kernel (``repro.kernels.fused_route_bucket``);
+     the new buckets + residue become the pending half of the carry.
+
+Because stage 3 of window k is data-independent of stage 1's collective
+result, the route/aggregate of window k can overlap the decode of window
+k-1 on hardware with async collectives.  After the scan, one drain step
+flushes the final window's buckets.
 
 Conservation (no spike lost, none applied at the wrong step) is asserted in
-tests against a monolithic single-device reference simulation.
+tests against a monolithic single-device reference simulation; the residue
+chain is externally checkable from ``WindowStats`` (see the identity in
+``tests``: sum(offered) - re-offered == sum(sent) + final deferred +
+dropped).
 """
 from __future__ import annotations
 
@@ -42,6 +56,7 @@ class SimConfig(NamedTuple):
     e_max: int = 512          # spike-compaction buffer per window
     capacity: int = 256       # bucket capacity (events per dest per window)
     params: lif.LIFParams = lif.LIFParams()
+    residue: int = 256        # deferred-event carry buffer (re-offered)
 
 
 class ShardState(NamedTuple):
@@ -52,12 +67,29 @@ class ShardState(NamedTuple):
     key: jax.Array            # PRNG for background drive
 
 
+class PendingWindow(NamedTuple):
+    """The pipelined half of the scan carry: window k's aggregated buckets,
+    exchanged+decoded at the start of iteration k+1, plus the deferred
+    events re-offered into window k+1's aggregation."""
+
+    data: jax.Array           # (n_shards, capacity) u32 bucketed events
+    counts: jax.Array         # (n_shards,) i32 accepted per destination
+    residue: jax.Array        # (residue,) u32 deferred events (INVALID pad)
+
+
 class WindowStats(NamedTuple):
     spikes: jax.Array         # () i32 local spikes this window
     events_sent: jax.Array    # () i32 events shipped (incl. replicas)
-    overflow: jax.Array       # () i32 deferred events (bucket full)
+    overflow: jax.Array       # () i32 events dropped (compaction + residue)
     wire_bytes: jax.Array     # () i32 Extoll bytes this window
-    deadline_miss: jax.Array  # () i32 events landing past their deadline
+    deadline_miss: jax.Array  # () i32 events landing past their deadline;
+                              # NOTE pipelining shifts attribution: row k
+                              # counts the decode of window k-1's buckets
+                              # (row 0 is always 0, the final window's
+                              # misses land on the last row via the drain).
+                              # Totals over a run are exact.
+    offered: jax.Array        # () i32 routed events offered (incl. re-offers)
+    deferred: jax.Array       # () i32 events carried to the next window
 
 
 def _simulate_steps(state: ShardState, cfg: SimConfig, bg_rate: jax.Array,
@@ -141,43 +173,87 @@ def _apply_events(state: ShardState, words: jax.Array, counts: jax.Array,
     return state._replace(ring_exc=ring_exc, ring_inh=ring_inh), miss
 
 
-def make_window_fn(cfg: SimConfig, *, axis_name: str | None):
-    """Build the per-window shard body (axis_name=None -> single shard)."""
+def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
+    """Build the pipelined per-window machinery (axis_name=None -> single
+    shard, no collective).
 
-    def body(state: ShardState, tables: RoutingTables, w_exc, w_inh,
-             delays, bg_rate, bg_w):
+    Returns ``(init_pending, body, drain)``:
+      init_pending()              -> empty PendingWindow carry half
+      body((state, pending), ...) -> ((state, pending'), WindowStats)
+      drain(state, pending, ...)  -> (state, deadline_misses) flushing the
+                                     final window's buckets after the scan.
+    """
+
+    def init_pending() -> PendingWindow:
+        return PendingWindow(
+            data=jnp.zeros((cfg.n_shards, cfg.capacity), jnp.uint32),
+            counts=jnp.zeros((cfg.n_shards,), jnp.int32),
+            residue=jnp.full((cfg.residue,), ev.INVALID_EVENT),
+        )
+
+    def _exchange(pend: PendingWindow):
+        """ONE packed all_to_all per window: [events | count] per row."""
+        if axis_name is None:
+            return pend.data, pend.counts
+        cn = jax.lax.bitcast_convert_type(pend.counts, jnp.uint32)[:, None]
+        packed = jnp.concatenate([pend.data, cn], axis=1)
+        recv = jax.lax.all_to_all(packed, axis_name, 0, 0, tiled=True)
+        recv = recv.reshape(cfg.n_shards, cfg.capacity + 1)
+        counts = jax.lax.bitcast_convert_type(recv[:, cfg.capacity], jnp.int32)
+        return recv[:, :cfg.capacity], counts
+
+    def _decode(state: ShardState, pend: PendingWindow, w_exc, w_inh):
+        recv, counts = _exchange(pend)
+        src_shard = jnp.arange(cfg.n_shards)
+        return _apply_events(state, recv, counts, w_exc, w_inh, cfg,
+                             src_shard)
+
+    def body(carry, tables: RoutingTables, w_exc, w_inh, delays, bg_rate,
+             bg_w):
+        state, pend = carry
+        # 1. exchange + decode window k-1 (same systemtime as unpipelined:
+        #    state.t here == that window's end); the route/aggregate below
+        #    never reads the collective's result, so the two can overlap.
+        state, miss = _decode(state, pend, w_exc, w_inh)
+        # 2. simulate window k
         t0 = state.t
         state, spikes = _simulate_steps(state, cfg, bg_rate, bg_w)
+        # 3. fused route+aggregate of window k's spikes + deferred residue;
+        #    residue goes FIRST so deferred events (oldest deadlines) win
+        #    bucket slots over fresh spikes — FIFO back-pressure, no
+        #    starvation under sustained per-destination overflow
         words, lost = _spikes_to_events(spikes, t0, delays, cfg)
-        dest, guid, routed = tables.route(words)
-        words_r = jnp.where(routed, words, ev.INVALID_EVENT)
-        b = aggregator.aggregate(words_r, dest, guid, cfg.n_shards,
-                                 cfg.capacity, impl="auto")
+        words = jnp.concatenate([pend.residue, words])
+        from repro.kernels import fused_route_bucket as frb
+        fw = frb.fused_route_aggregate(
+            words, tables.dest_of_addr, tables.guid_of_addr, cfg.n_shards,
+            cfg.capacity, residue_len=cfg.residue)
+        b = fw.buckets
         if axis_name is not None:
             my = jax.lax.axis_index(axis_name)
-            recv = jax.lax.all_to_all(b.data, axis_name, 0, 0, tiled=True)
-            recv = recv.reshape(cfg.n_shards, cfg.capacity)
-            counts = jax.lax.all_to_all(
-                b.counts.reshape(cfg.n_shards, 1), axis_name, 0, 0, tiled=True
-            ).reshape(cfg.n_shards)
             off = jnp.where(jnp.arange(cfg.n_shards) == my, 0, b.counts)
         else:
-            recv, counts = b.data, b.counts
             off = jnp.zeros_like(b.counts)
-        src_shard = jnp.arange(cfg.n_shards)
-        state, miss = _apply_events(state, recv, counts, w_exc, w_inh, cfg,
-                                    src_shard)
         cost = aggregator.window_cost(off)
         stats = WindowStats(
             spikes=jnp.sum(spikes).astype(jnp.int32),
             events_sent=jnp.sum(b.counts),
-            overflow=b.overflow + lost,
+            overflow=(lost + fw.dropped).astype(jnp.int32),
             wire_bytes=cost.bytes,
             deadline_miss=miss.astype(jnp.int32),
+            offered=fw.offered,
+            deferred=fw.deferred,
         )
-        return state, stats
+        return (state, PendingWindow(b.data, b.counts, fw.residue)), stats
 
-    return body
+    def drain(state: ShardState, pend: PendingWindow, w_exc, w_inh):
+        """Flush the last window's buckets (its decode slot is the step
+        after the scan ends; the final residue stays deferred and is
+        reported via the last window's ``deferred``)."""
+        state, miss = _decode(state, pend, w_exc, w_inh)
+        return state, miss.astype(jnp.int32)
+
+    return init_pending, body, drain
 
 
 def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
@@ -208,16 +284,23 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
                          for t in tabs])
     bg = jnp.asarray(np.pad(bg_rates, (0, n_tot - len(bg_rates))).reshape(S, per))
 
-    body = make_window_fn(cfg, axis_name=axis_name)
+    init_pending, body, drain = make_pipeline_fns(cfg, axis_name=axis_name)
 
     def shard_fn(state, dest, guid, mcast, w_e, w_i, dl, bgr, n_windows):
         tables = RoutingTables(dest[0], guid[0], mcast[0])
         st = jax.tree_util.tree_map(lambda x: x[0], state)
 
-        def win(s, _):
-            return body(s, tables, w_e[0], w_i[0], dl[0], bgr[0], bg_weight)
+        def win(carry, _):
+            return body(carry, tables, w_e[0], w_i[0], dl[0], bgr[0],
+                        bg_weight)
 
-        st, stats = jax.lax.scan(win, st, None, length=n_windows)
+        (st, pend), stats = jax.lax.scan(win, (st, init_pending()), None,
+                                         length=n_windows)
+        # flush the final window's buckets (one extra decode step)
+        st, miss_d = drain(st, pend, w_e[0], w_i[0])
+        if n_windows > 0:
+            stats = stats._replace(
+                deadline_miss=stats.deadline_miss.at[-1].add(miss_d))
         return (jax.tree_util.tree_map(lambda x: x[None], st),
                 jax.tree_util.tree_map(lambda x: x[None], stats))
 

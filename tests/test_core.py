@@ -199,11 +199,12 @@ def test_aggregate_impls_agree(n, d, c, seed):
     dest = jax.random.randint(k3, (n,), -2, d)
     guid = jax.random.randint(k4, (n,), 0, 100)
     b1 = agg.aggregate(words, dest, guid, d, c, impl="onehot")
-    b2 = agg.aggregate(words, dest, guid, d, c, impl="sort")
-    assert (b1.counts == b2.counts).all()
-    assert (b1.data == b2.data).all()
-    assert (b1.guids == b2.guids).all()
-    assert int(b1.overflow) == int(b2.overflow)
+    for impl in ("sort", "fused"):
+        b2 = agg.aggregate(words, dest, guid, d, c, impl=impl)
+        assert (b1.counts == b2.counts).all(), impl
+        assert (b1.data == b2.data).all(), impl
+        assert (b1.guids == b2.guids).all(), impl
+        assert int(b1.overflow) == int(b2.overflow), impl
     # conservation: accepted + overflow == valid routed events
     valid = np.asarray(ev.is_valid(words) & (dest >= 0) & (dest < d))
     assert int(b1.counts.sum()) + int(b1.overflow) == valid.sum()
