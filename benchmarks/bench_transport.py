@@ -1,0 +1,114 @@
+"""Flush-window transport head-to-head: alltoall vs torus2d (paper §1/§3).
+
+One exchange window (fused route+aggregate + ship + multicast) per
+backend on a (2, 4) torus of 8 shards, plus a credit-throttled torus2d
+variant so the stall path is exercised.  Needs 8 devices, so the timed
+work runs in a subprocess with ``xla_force_host_platform_device_count=8``
+(the harness process has already initialized single-device jax);
+results feed ``BENCH_transport.json`` with backend, mesh shape,
+median_ms, events_per_s and credit_stalls per row.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import events as ev, routing as rt
+from repro.core.exchange import make_exchange
+from repro.launch.mesh import make_wafer_mesh, wafer_torus_shape
+
+params = json.loads(sys.argv[1])
+n_shards, n_addr = 8, 1024
+N, C, iters = params["n"], params["c"], params["iters"]
+mesh = make_wafer_mesh(n_shards)
+nx, ny = wafer_torus_shape(n_shards)
+tabs = []
+for s in range(n_shards):
+    projs = [rt.Projection(a, a + 1, dest_node=(a * 7 + s) % n_shards,
+                           dest_links=[a % 3]) for a in range(n_addr)]
+    tabs.append(rt.build_tables(n_addr, projs, n_guid=64))
+stacked = rt.RoutingTables(
+    dest_of_addr=jnp.stack([t.dest_of_addr for t in tabs]),
+    guid_of_addr=jnp.stack([t.guid_of_addr for t in tabs]),
+    mcast_of_guid=jnp.stack([t.mcast_of_guid for t in tabs]))
+words = ev.pack(
+    jax.random.randint(jax.random.PRNGKey(0), (n_shards, N), 0, n_addr),
+    jax.random.randint(jax.random.PRNGKey(1), (n_shards, N), 0, 1000))
+
+def median_ms(fn, *args):
+    jax.tree_util.tree_leaves(fn(*args))[0].block_until_ready()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e3
+
+rows = []
+cases = [("alltoall", None, ""),
+         ("torus2d", {"nx": nx, "ny": ny}, ""),
+         ("torus2d", {"nx": nx, "ny": ny, "link_credits": params["credits"]},
+          "+credits")]
+for backend, opts, tag in cases:
+    run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
+                        n_addr_per_shard=n_addr, transport=backend,
+                        transport_opts=opts)
+    out = run(words, stacked)
+    med = median_ms(run, words, stacked)
+    sent = int(np.asarray(out.link.sent_events).sum())
+    rows.append({
+        "backend": backend + tag,
+        "mesh": "%dx%d" % (nx, ny) if backend == "torus2d" else "crossbar",
+        "shape": "S=8 N={} C={}".format(N, C),
+        "median_ms": med,
+        "events_per_s": sent / (med * 1e-3) if med > 0 else 0.0,
+        "credit_stalls": int(np.asarray(out.link.credit_stalls).sum()),
+        "hops": int(np.asarray(out.link.hops)[0]),
+        "forwarded_bytes": int(np.asarray(out.link.forwarded_bytes).sum()),
+    })
+print("BENCH_JSON " + json.dumps(rows))
+'''
+
+
+def main(report) -> None:
+    params = {
+        "n": 512 if report.smoke else 4096,
+        "c": 64 if report.smoke else 256,
+        "iters": 5 if report.smoke else 15,
+    }
+    # throttle to roughly half the typical per-link demand so stalls
+    # occur, but never below the bucket capacity (admission invariant)
+    params["credits"] = max(params["n"] // 8, params["c"])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, json.dumps(params)],
+        capture_output=True, text=True, timeout=900, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"bench_transport subprocess failed:\n{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][0]
+    for row in json.loads(line[len("BENCH_JSON "):]):
+        report.bench(
+            "transport", row["backend"], f"mesh={row['mesh']} {row['shape']}",
+            row["median_ms"], row["events_per_s"],
+            notes=f"stalls={row['credit_stalls']}",
+            extra={
+                "backend": row["backend"],
+                "mesh": row["mesh"],
+                "credit_stalls": row["credit_stalls"],
+                "hops": row["hops"],
+                "forwarded_bytes": row["forwarded_bytes"],
+            })

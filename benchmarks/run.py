@@ -4,12 +4,12 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>] [--smoke]
                                                 [--out-dir DIR]
 Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
 ``BENCH_<group>.json`` files (one JSON list of
-``{op, shape, median_ms, events_per_s}`` rows per group, currently
-``kernels`` and ``link``) so the perf trajectory across PRs can be diffed
-without parsing the CSV.
+``{op, shape, median_ms, events_per_s, ...}`` rows per group, currently
+``kernels``, ``link`` and ``transport``) so the perf trajectory across PRs
+can be diffed without parsing the CSV.
 
 ``--smoke`` runs a reduced module set with shrunk shapes — fast enough for
-the tier-1 time budget while still producing both JSON files.
+the tier-1 time budget while still producing all three JSON files.
 
 Modules:
   bench_aggregation  paper §3.1 throughput claims (the central table)
@@ -19,6 +19,9 @@ Modules:
   bench_microcircuit paper §4 target workload
   bench_moe_dispatch beyond-paper: bucket dispatch as MoE EP
   bench_kernels      Pallas kernel cost models
+  bench_transport    alltoall vs torus2d flush-window backends head-to-head
+                     (8 forced host devices in a subprocess; rows carry
+                     backend, mesh shape and credit_stalls)
 """
 from __future__ import annotations
 
@@ -36,9 +39,11 @@ MODULES = [
     "bench_microcircuit",
     "bench_moe_dispatch",
     "bench_kernels",
+    "bench_transport",
 ]
 
-SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels"]
+SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels",
+                 "bench_transport"]
 
 
 def median_ms(fn, *args, iters: int = 15) -> float:
@@ -69,17 +74,21 @@ class Reporter:
         sys.stdout.flush()
 
     def bench(self, group: str, op: str, shape: str, med_ms: float,
-              events_per_s: float | None = None, notes: str = ""):
+              events_per_s: float | None = None, notes: str = "",
+              extra: dict | None = None):
         row = {"op": op, "shape": shape, "median_ms": round(med_ms, 6)}
         if events_per_s is not None:
             row["events_per_s"] = round(events_per_s)
         if notes:
             row["notes"] = notes
+        if extra:
+            row.update(extra)
         self._groups.setdefault(group, []).append(row)
-        extra = f"{row.get('events_per_s', '')} ev/s {notes}".strip()
-        self(f"{group}/{op}/{shape}/median_ms", round(med_ms, 4), extra)
+        note = f"{row.get('events_per_s', '')} ev/s {notes}".strip()
+        self(f"{group}/{op}/{shape}/median_ms", round(med_ms, 4), note)
 
     def dump(self, out_dir: str):
+        os.makedirs(out_dir, exist_ok=True)
         for group, rows in self._groups.items():
             path = os.path.join(out_dir, f"BENCH_{group}.json")
             with open(path, "w") as f:

@@ -1,25 +1,33 @@
 """End-to-end driver: the paper's target workload — a (reduced-scale)
 Potjans-Diesmann cortical microcircuit spread over 4 'wafer' shards, spikes
-exchanged through the bucket-aggregated all_to_all fabric.
+exchanged through the bucket-aggregated transport fabric.
 
 Prints per-window communication stats (events, wire bytes, aggregation
 efficiency, deadline misses) — the numbers the Extoll link budget cares
 about — plus per-population firing rates.
 
 NOTE: must run as its own process (forces 4 host devices).
-Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py
+Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py [torus2d]
+(arg selects the transport backend; default "alltoall".  "torus2d" walks
+dimension-ordered neighbor hops on a 2x2 device torus and reports the
+link-level hop/forwarding stats.)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
+import dataclasses
+import sys
+
 import jax
 import numpy as np
 
+from repro.configs import brainscales
 from repro.core import aggregator
+from repro.launch.mesh import make_wafer_mesh, wafer_torus_shape
 from repro.snn import microcircuit as mc, network, simulator as sim
 
 
-def main():
+def main(transport: str = "alltoall"):
     spec = mc.MicrocircuitSpec(scale=0.004)
     w, is_inh = spec.weight_matrix()
     print(f"microcircuit: {spec.n_neurons} neurons, "
@@ -29,13 +37,19 @@ def main():
     print(f"partition: 4 wafer shards x {part.per_shard} neurons, "
           f"max fan-out {part.fanout.shape[1]} shards/source")
 
+    bs = dataclasses.replace(brainscales.CONFIG, transport=transport)
     cfg = sim.SimConfig(
         n_shards=4, per_shard=part.per_shard,
         max_fan=part.fanout.shape[1],
         window=8,                  # <= min axonal delay (deadline flush)
         ring_len=32, e_max=512, capacity=512,
+        **bs.transport_fields(),
     )
-    mesh = jax.make_mesh((4,), ("wafer",))
+    if transport == "torus2d":
+        print(f"transport: {transport} {wafer_torus_shape(4)} torus")
+    else:
+        print(f"transport: {transport}")
+    mesh = make_wafer_mesh(4)
     init, run = sim.build_sharded_sim(mesh, "wafer", cfg, part,
                                       spec.bg_rates())
     state = init(seed=0)
@@ -60,9 +74,17 @@ def main():
           f"-> bucket aggregation saves "
           f"{int(naive.bytes) / max(int(wire), 1):.1f}x")
     print(f"deadline misses: {int(miss)}   bucket overflows: {int(ovf)}")
+    if transport == "torus2d":
+        link = stats.link
+        print(f"torus link stats: {int(np.asarray(link.hops)[0, 0])} "
+              f"hops/window, "
+              f"{int(np.asarray(link.forwarded_bytes).sum())} forwarded "
+              f"bytes, max in-flight "
+              f"{int(np.asarray(link.max_in_flight).max())} events, "
+              f"{int(np.asarray(link.credit_stalls).sum())} credit stalls")
     assert miss == 0, "windowed exchange must respect timestamp deadlines"
     print("ok.")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1] if len(sys.argv) > 1 else "alltoall")

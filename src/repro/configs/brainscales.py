@@ -17,6 +17,22 @@ class BrainScaleSConfig:
     flush_margin: int = 64           # systemtime slack
     fpga_clock_mhz: float = 210.0
     microcircuit_scale: float = 1.0
+    # flush-window transport (repro.transport): "alltoall" ships one global
+    # collective per window; "torus2d" walks dimension-ordered neighbor
+    # hops over a (torus_nx, torus_ny) device torus with credit-based link
+    # flow control (link_credits events/window/egress-link, 0 = off).
+    transport: str = "alltoall"
+    torus_nx: int = 0                # 0 = most-square auto factorization
+    torus_ny: int = 0
+    link_credits: int = 0
+    notify_latency: int = 2
+
+    def transport_fields(self) -> dict:
+        """The transport-selection kwargs of ``snn.simulator.SimConfig``
+        (pass as ``SimConfig(..., **cfg.transport_fields())``)."""
+        return dict(transport=self.transport, torus_nx=self.torus_nx,
+                    torus_ny=self.torus_ny, link_credits=self.link_credits,
+                    notify_latency=self.notify_latency)
 
 
 CONFIG = BrainScaleSConfig()

@@ -6,22 +6,38 @@ One "wafer shard" per mesh device along a named axis.  A flush window is:
                    (``repro.kernels.fused_route_bucket``): source LUT
                    lookup (§3, LUT 1) and destination-bucketed binning with
                    static capacity (§3.1) in one sort-based pass
-  2. **all_to_all** — ONE collective per window ships every bucket to its
-                   owner: events, guids and counts are packed into a single
-                   (n_shards, 2·capacity+1) u32 buffer so the latency-bound
-                   ICI hop is paid once, exactly like the paper amortizes
-                   the Extoll packet header across a full bucket
+  2. **transport**  — a pluggable backend (``repro.transport``) ships every
+                   bucket to its owner:
+
+                   * ``"alltoall"`` — events|guids|counts packed into ONE
+                     ``(n_shards, 2·capacity+1)`` u32 buffer, one global
+                     ``all_to_all`` per window; the fabric as a crossbar,
+                     paying the latency-bound hop once, exactly like the
+                     paper amortizes the Extoll packet header over a bucket.
+                   * ``"torus2d"`` — torus-faithful: shards fold onto a 2-D
+                     (x, y) device torus and each window travels via
+                     dimension-ordered neighbor ``ppermute`` hops (X rings,
+                     then Y) through store-and-forward buffers, governed by
+                     credit-based link flow control (§2.1's notification
+                     credits, per egress link).  The lowered HLO contains
+                     only neighbor collective-permutes — per-link hop
+                     latency, bandwidth and back-pressure become visible
+                     (``LinkStats``) instead of being averaged away by a
+                     global collective.
+
   3. **multicast** — destination-side GUID lookup -> multicast mask,
                    replaying events onto local HICANN links       (§3, LUT 2)
 
-All stages run inside ``shard_map`` so the collective is explicit — the
-lowered HLO contains exactly one all-to-all per flush window, and the
-roofline's collective term can be read straight off it.
+All stages run inside ``shard_map`` so the collectives are explicit and the
+roofline's collective term can be read straight off the lowered HLO.
 
-Overflow policy: events beyond a bucket's capacity in one window are
-*carried over* to the next window through a per-shard residue buffer —
-functionally the FPGA's back-pressure on the HICANN links.  Tests assert no
-event is ever lost (conservation), matching the bucket model oracle.
+Overflow and back-pressure share one policy: events beyond a bucket's
+capacity — and, under ``torus2d``, whole buckets refused by a congested
+egress link (``sent_mask``) — are *deferred* to the next window through the
+caller's residue machinery rather than buffered unboundedly in the fabric.
+Tests assert conservation at both levels: aggregation
+(``offered == sent + deferred + dropped``) and transport
+(``offered == sent + deferred``, globally ``sum(sent) == sum(delivered)``).
 """
 from __future__ import annotations
 
@@ -32,29 +48,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import transport as tp
 from repro.core import aggregator, events as ev
 from repro.core.routing import RoutingTables
-
-
-def pack_buckets(data: jax.Array, guids: jax.Array,
-                 counts: jax.Array) -> jax.Array:
-    """Pack (D, C) events + (D, C) guids + (D,) counts into one u32 buffer.
-
-    Layout per destination row: ``[data | guids | count]`` -> (D, 2C+1).
-    Bitcasts (not converts) keep negative guid sentinels exact on the wire.
-    """
-    gu = jax.lax.bitcast_convert_type(guids, jnp.uint32)
-    cn = jax.lax.bitcast_convert_type(counts, jnp.uint32)[:, None]
-    return jnp.concatenate([data, gu, cn], axis=1)
-
-
-def unpack_buckets(buf: jax.Array, capacity: int):
-    """Inverse of :func:`pack_buckets` -> (data, guids, counts)."""
-    data = buf[:, :capacity]
-    guids = jax.lax.bitcast_convert_type(buf[:, capacity:2 * capacity],
-                                         jnp.int32)
-    counts = jax.lax.bitcast_convert_type(buf[:, 2 * capacity], jnp.int32)
-    return data, guids, counts
 
 
 class ExchangeOut(NamedTuple):
@@ -65,8 +61,12 @@ class ExchangeOut(NamedTuple):
     recv_counts: jax.Array   # (n_shards,) i32
     link_events: jax.Array   # (n_links, n_shards*C) u32 after multicast
     sent_counts: jax.Array   # (n_shards,) i32 events sent per destination
-    overflow: jax.Array      # () i32 events deferred to the next window
-    wire_bytes: jax.Array    # () i32 off-shard bytes this window
+    overflow: jax.Array      # () i32 events beyond bucket capacity
+    wire_bytes: jax.Array    # () i32 off-shard bytes this window (all hops)
+    sent_mask: jax.Array     # (n_shards,) bool False = bucket row deferred
+                             #   by link flow control (re-offer next window)
+    link: tp.LinkStats       # per-window link-level stats
+    link_state: tp.LinkState  # advanced credit state (thread across windows)
 
 
 def exchange_window(
@@ -78,9 +78,10 @@ def exchange_window(
     capacity: int,
     n_links: int = 8,
     impl: str = "auto",
+    transport: tp.Transport | None = None,
+    link_state: tp.LinkState | None = None,
 ) -> ExchangeOut:
     """One flush window of the spike fabric; call inside shard_map."""
-    my = jax.lax.axis_index(axis_name)
 
     # 1. fused route + aggregate (the paper's LUT 1 + §3.1 buckets)
     if impl in ("auto", "fused", "pallas"):
@@ -95,11 +96,20 @@ def exchange_window(
         b = aggregator.aggregate(words, dest, guid, n_shards, capacity,
                                  impl=impl)
 
-    # 2. ONE all_to_all ships every bucket (events+guids+counts packed)
-    packed = pack_buckets(b.data, b.guids, b.counts)
-    recv = jax.lax.all_to_all(packed, axis_name, 0, 0, tiled=True)
-    recv = recv.reshape(n_shards, 2 * capacity + 1)
-    recv_events, recv_guids, recv_counts = unpack_buckets(recv, capacity)
+    # 2. transport ships every bucket (events+guids payload, counts packed
+    #    by the backend; alltoall lowers to exactly ONE all_to_all)
+    if transport is None:
+        transport = tp.create("alltoall", n_shards=n_shards)
+    if link_state is None:
+        link_state = transport.init_state()
+    payload = jnp.concatenate(
+        [b.data, jax.lax.bitcast_convert_type(b.guids, jnp.uint32)], axis=1)
+    out = transport.exchange(link_state, payload, b.counts,
+                             axis_name=axis_name)
+    recv_events = out.recv_payload[:, :capacity]
+    recv_guids = jax.lax.bitcast_convert_type(out.recv_payload[:, capacity:],
+                                              jnp.int32)
+    recv_counts = out.recv_counts
 
     # mask out slots beyond the per-source count
     slot = jnp.arange(capacity)[None, :]
@@ -113,10 +123,6 @@ def exchange_window(
     bits = (masks[None, :] >> jnp.arange(n_links, dtype=jnp.uint32)[:, None]) & 1
     link_events = jnp.where(bits.astype(bool), flat_ev[None, :], ev.INVALID_EVENT)
 
-    # wire cost: only off-shard buckets pay Extoll packets
-    off = jnp.where(jnp.arange(n_shards) == my, 0, b.counts)
-    cost = aggregator.window_cost(off)
-
     return ExchangeOut(
         recv_events=recv_events,
         recv_guids=recv_guids,
@@ -124,25 +130,43 @@ def exchange_window(
         link_events=link_events,
         sent_counts=b.counts,
         overflow=b.overflow,
-        wire_bytes=cost.bytes,
+        wire_bytes=out.stats.forwarded_bytes,
+        sent_mask=out.sent_mask,
+        link=out.stats,
+        link_state=out.state,
     )
 
 
 def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
-                  n_addr_per_shard: int, n_links: int = 8, impl: str = "auto"):
+                  n_addr_per_shard: int, n_links: int = 8, impl: str = "auto",
+                  transport: str = "alltoall",
+                  transport_opts: dict | None = None):
     """Build the jitted multi-shard exchange.
 
-    Returns f(words[(n_shards, N)], tables[stacked over shard dim]) ->
-    ExchangeOut with a leading shard dimension.  ``tables`` is a
-    RoutingTables whose arrays carry a leading (n_shards,) dim.
+    ``transport`` selects the backend (``"alltoall" | "torus2d"``);
+    ``transport_opts`` are forwarded to :func:`repro.transport.create`
+    (torus mesh shape, link credits...).  Returns
+    f(words[(n_shards, N)], tables[stacked over shard dim]) -> ExchangeOut
+    with a leading shard dimension.  ``tables`` is a RoutingTables whose
+    arrays carry a leading (n_shards,) dim.  Link-flow-control state starts
+    fresh each call (one-shot window; thread ``exchange_window`` manually
+    for multi-window credit dynamics).
     """
     from jax.experimental.shard_map import shard_map
+
+    transport_opts = dict(transport_opts or {})
+    if transport == "torus2d":
+        # a bucket row holds up to `capacity` events; the backend raises
+        # if link_credits could never admit a full row (livelock guard)
+        transport_opts.setdefault("max_row_events", capacity)
+    backend = tp.create(transport, n_shards=n_shards, **transport_opts)
 
     def body(words, dest_t, guid_t, mcast_t):
         tables = RoutingTables(dest_t[0], guid_t[0], mcast_t[0])
         return exchange_window(
             words[0], tables, axis_name=axis_name, n_shards=n_shards,
             capacity=capacity, n_links=n_links, impl=impl,
+            transport=backend,
         )
 
     spec = P(axis_name)
@@ -162,4 +186,3 @@ def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
                   tables.mcast_of_guid)
 
     return run
-

@@ -18,9 +18,11 @@ This module models that discipline functionally:
 * ``producer_step`` / ``consumer_step`` — one step of each side.
 * ``run`` — closed-loop scan for benchmarks.
 
-The same discipline is used at two places in the framework: the host→device
-data-pipeline prefetch (``repro.data.pipeline``) and the serving engine's
-response ring (``repro.serve.engine``).
+The same discipline is used at three places in the framework: the
+host→device data-pipeline prefetch (``repro.data.pipeline``), the serving
+engine's response ring (``repro.serve.engine``), and — vectorized over the
+egress links of a torus node via ``CreditBank`` — the per-link flow control
+of the torus transport backend (``repro.transport.torus``).
 """
 from __future__ import annotations
 
@@ -91,6 +93,45 @@ def tick(state: RingState) -> RingState:
     arrived = state.pending[0]
     pending = jnp.roll(state.pending, -1, 0).at[-1].set(0)
     return state._replace(credits=state.credits + arrived, pending=pending)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized credit bank — the ring discipline above, over K independent
+# links with a shared notification latency.  Used per torus-node egress link.
+# ---------------------------------------------------------------------------
+
+class CreditBank(NamedTuple):
+    """Producer-visible credits for K links + their notification delay lines.
+
+    credits: (K,) i32 — units the producer may still inject per link
+    pending: (K, L) i32 — spent units travelling back as notifications;
+             column 0 is delivered by the next :func:`credit_tick`.
+    """
+
+    credits: jax.Array
+    pending: jax.Array
+
+
+def init_credits(n_links: int, limit: int, notify_latency: int) -> CreditBank:
+    return CreditBank(
+        credits=jnp.full((n_links,), limit, jnp.int32),
+        pending=jnp.zeros((n_links, max(notify_latency, 1)), jnp.int32),
+    )
+
+
+def credit_tick(bank: CreditBank, spent: jax.Array) -> CreditBank:
+    """One window: spend ``spent`` (K,) units and advance the delay lines.
+
+    The consumer's notification for this window's data is enqueued at the
+    tail and returns as producer credit ``notify_latency`` windows later —
+    the same producer/consumer/tick cycle as ``RingState``, batched to one
+    call per flush window.  Callers must ensure ``spent <= credits``.
+    """
+    arrived = bank.pending[:, 0]
+    pending = jnp.roll(bank.pending, -1, axis=1).at[:, -1].set(
+        spent.astype(jnp.int32))
+    credits = bank.credits - spent.astype(jnp.int32) + arrived
+    return CreditBank(credits=credits, pending=pending)
 
 
 class RunStats(NamedTuple):

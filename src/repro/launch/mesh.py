@@ -5,6 +5,14 @@ the paper's Extoll fabric; ``("data", "model")`` maps DP/FSDP onto long
 torus dimensions and TP onto the short ones, and the ``pod`` axis is the
 inter-pod DCN — the BrainScaleS wafer-to-wafer hop (paper Fig. 1).
 
+The spike fabric runs on a 1-D ``"wafer"`` axis
+(:func:`make_wafer_mesh`); how a flush window crosses it is the
+*transport* choice (``repro.transport``): ``"alltoall"`` treats the axis
+as a crossbar (one global collective), ``"torus2d"`` folds it onto
+(nx, ny) rings (:func:`wafer_torus_shape`) and ships neighbor
+``ppermute`` hops with credit-based link flow control — the same
+coordinates ``core.torus`` reasons about on the host.
+
 NOTE: functions, not module constants — importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
 """
@@ -29,3 +37,16 @@ def make_test_mesh(n_data: int = 2, n_model: int = 4, pods: int = 0):
 
 def batch_axes(mesh) -> tuple:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_wafer_mesh(n_shards: int, axis: str = "wafer"):
+    """1-D mesh for the spike-exchange fabric (one device per shard)."""
+    return jax.make_mesh((n_shards,), (axis,))
+
+
+def wafer_torus_shape(n_shards: int) -> tuple:
+    """(nx, ny) rings the torus2d transport folds ``n_shards`` onto —
+    most-square factorization; 8 shards -> (2, 4), the paper's per-wafer
+    concentrator face."""
+    from repro.transport.torus import default_shape
+    return default_shape(n_shards)

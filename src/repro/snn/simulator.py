@@ -8,18 +8,25 @@ level (the same trick NEST/SpiNNaker use: communicate every min-delay).
 
 The window loop is a **software-pipelined ``lax.scan``**: the carry holds,
 besides the neuron/ring state, the *pending* aggregated buckets of the
-previous window and a double-buffered overflow **residue**.  Iteration k:
+previous window, a double-buffered overflow **residue**, and the transport
+backend's link flow-control state.  Iteration k:
 
-  1. exchange+decode window k-1's pending buckets (ONE packed
-     ``all_to_all`` — events and counts travel in the same buffer) and
-     scatter their weighted input into the delay ring; this happens at the
-     same systemtime as the unpipelined formulation (the start of window k
-     == the end of window k-1), so deadline semantics are unchanged,
+  1. exchange+decode window k-1's pending buckets through the configured
+     transport (``cfg.transport``: ``"alltoall"`` ships ONE packed
+     collective per window; ``"torus2d"`` walks dimension-ordered neighbor
+     ``ppermute`` hops over a 2-D device torus under credit-based link flow
+     control — see ``repro.transport``) and scatter their weighted input
+     into the delay ring; this happens at the same systemtime as the
+     unpipelined formulation (the start of window k == the end of window
+     k-1), so deadline semantics are unchanged.  Bucket rows refused by a
+     congested egress link are *deferred*: their events re-enter this
+     window's aggregation ahead of everything else,
   2. ``lax.scan`` the LIF dynamics ``window`` steps off the ring,
-  3. compact spikes into packed events, append the residue deferred from
-     window k-1 (the FPGA's back-pressure on the HICANN links), and run the
-     fused route+aggregate kernel (``repro.kernels.fused_route_bucket``);
-     the new buckets + residue become the pending half of the carry.
+  3. compact spikes into packed events, append the transport-deferred
+     events and the residue deferred from window k-1 (the FPGA's
+     back-pressure on the HICANN links), and run the fused route+aggregate
+     kernel (``repro.kernels.fused_route_bucket``); the new buckets +
+     residue become the pending half of the carry.
 
 Because stage 3 of window k is data-independent of stage 1's collective
 result, the route/aggregate of window k can overlap the decode of window
@@ -42,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import transport as tp
 from repro.core import aggregator, events as ev
 from repro.core.routing import RoutingTables
 from repro.snn import lif, network
@@ -57,6 +65,11 @@ class SimConfig(NamedTuple):
     capacity: int = 256       # bucket capacity (events per dest per window)
     params: lif.LIFParams = lif.LIFParams()
     residue: int = 256        # deferred-event carry buffer (re-offered)
+    transport: str = "alltoall"   # flush-window backend (see repro.transport)
+    torus_nx: int = 0         # torus2d mesh shape (0 = auto-factorize)
+    torus_ny: int = 0
+    link_credits: int = 0     # per-window events per egress link (0 = off)
+    notify_latency: int = 2   # windows before spent link credits return
 
 
 class ShardState(NamedTuple):
@@ -81,7 +94,11 @@ class WindowStats(NamedTuple):
     spikes: jax.Array         # () i32 local spikes this window
     events_sent: jax.Array    # () i32 events shipped (incl. replicas)
     overflow: jax.Array       # () i32 events dropped (compaction + residue)
-    wire_bytes: jax.Array     # () i32 Extoll bytes this window
+    wire_bytes: jax.Array     # () i32 Extoll bytes of THIS window's fresh
+                              # buckets, single-shipment crossbar model
+                              # (re-offered deferrals count again; for the
+                              # torus per-hop wire model of what actually
+                              # crossed links, read link.forwarded_bytes)
     deadline_miss: jax.Array  # () i32 events landing past their deadline;
                               # NOTE pipelining shifts attribution: row k
                               # counts the decode of window k-1's buckets
@@ -90,6 +107,11 @@ class WindowStats(NamedTuple):
                               # Totals over a run are exact.
     offered: jax.Array        # () i32 routed events offered (incl. re-offers)
     deferred: jax.Array       # () i32 events carried to the next window
+    link: tp.LinkStats        # transport-level stats for the exchange run
+                              # at the START of this iteration (window k-1's
+                              # buckets; same one-row shift as deadline_miss;
+                              # its deferred_events re-enter THIS row's
+                              # `offered`)
 
 
 def _simulate_steps(state: ShardState, cfg: SimConfig, bg_rate: jax.Array,
@@ -177,12 +199,30 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
     """Build the pipelined per-window machinery (axis_name=None -> single
     shard, no collective).
 
-    Returns ``(init_pending, body, drain)``:
-      init_pending()              -> empty PendingWindow carry half
-      body((state, pending), ...) -> ((state, pending'), WindowStats)
-      drain(state, pending, ...)  -> (state, deadline_misses) flushing the
-                                     final window's buckets after the scan.
+    Returns ``(init_pending, init_link, body, drain)``:
+      init_pending()          -> empty PendingWindow carry half
+      init_link()             -> transport flow-control state carry half
+      body((state, pending, link), ...) -> ((state, pending', link'),
+                                            WindowStats)
+      drain(state, pending, link, ...)  -> (state, deadline_misses) flushing
+                                            the final window's buckets after
+                                            the scan (credits bypassed: the
+                                            fabric quiesces).
     """
+    if axis_name is not None:
+        opts = {}
+        if cfg.transport == "torus2d":
+            opts = dict(nx=cfg.torus_nx, ny=cfg.torus_ny,
+                        link_credits=cfg.link_credits,
+                        notify_latency=cfg.notify_latency,
+                        max_row_events=cfg.capacity)  # livelock guard
+        backend = tp.create(cfg.transport, n_shards=cfg.n_shards, **opts)
+    else:
+        backend = tp.Transport(cfg.n_shards)      # state-only stub
+    # can the transport ever refuse a bucket?  (static: gates the
+    # deferred-word re-offer plumbing out of the alltoall/uncredited path)
+    can_defer = (axis_name is not None and cfg.transport == "torus2d"
+                 and cfg.link_credits > 0)
 
     def init_pending() -> PendingWindow:
         return PendingWindow(
@@ -191,39 +231,52 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
             residue=jnp.full((cfg.residue,), ev.INVALID_EVENT),
         )
 
-    def _exchange(pend: PendingWindow):
-        """ONE packed all_to_all per window: [events | count] per row."""
-        if axis_name is None:
-            return pend.data, pend.counts
-        cn = jax.lax.bitcast_convert_type(pend.counts, jnp.uint32)[:, None]
-        packed = jnp.concatenate([pend.data, cn], axis=1)
-        recv = jax.lax.all_to_all(packed, axis_name, 0, 0, tiled=True)
-        recv = recv.reshape(cfg.n_shards, cfg.capacity + 1)
-        counts = jax.lax.bitcast_convert_type(recv[:, cfg.capacity], jnp.int32)
-        return recv[:, :cfg.capacity], counts
+    def init_link() -> tp.LinkState:
+        return backend.init_state()
 
-    def _decode(state: ShardState, pend: PendingWindow, w_exc, w_inh):
-        recv, counts = _exchange(pend)
+    def _exchange(pend: PendingWindow, lstate: tp.LinkState, *,
+                  enforce_credits: bool):
+        """Ship window k-1's buckets through the transport backend."""
+        if axis_name is None:
+            full = jnp.ones((cfg.n_shards,), bool)
+            return (pend.data, pend.counts, full, tp.zero_link_stats(),
+                    lstate)
+        out = backend.exchange(lstate, pend.data, pend.counts,
+                               axis_name=axis_name,
+                               enforce_credits=enforce_credits)
+        return (out.recv_payload, out.recv_counts, out.sent_mask, out.stats,
+                out.state)
+
+    def _decode(state: ShardState, recv, counts, w_exc, w_inh):
         src_shard = jnp.arange(cfg.n_shards)
         return _apply_events(state, recv, counts, w_exc, w_inh, cfg,
                              src_shard)
 
     def body(carry, tables: RoutingTables, w_exc, w_inh, delays, bg_rate,
              bg_w):
-        state, pend = carry
+        state, pend, lstate = carry
         # 1. exchange + decode window k-1 (same systemtime as unpipelined:
         #    state.t here == that window's end); the route/aggregate below
         #    never reads the collective's result, so the two can overlap.
-        state, miss = _decode(state, pend, w_exc, w_inh)
+        recv, counts, sent_mask, lstats, lstate = _exchange(
+            pend, lstate, enforce_credits=True)
+        state, miss = _decode(state, recv, counts, w_exc, w_inh)
         # 2. simulate window k
         t0 = state.t
         state, spikes = _simulate_steps(state, cfg, bg_rate, bg_w)
-        # 3. fused route+aggregate of window k's spikes + deferred residue;
-        #    residue goes FIRST so deferred events (oldest deadlines) win
-        #    bucket slots over fresh spikes — FIFO back-pressure, no
-        #    starvation under sustained per-destination overflow
+        # 3. fused route+aggregate of window k's spikes + deferred events;
+        #    transport-deferred buckets go FIRST, then the residue, then
+        #    fresh spikes — oldest deadlines win bucket slots (FIFO
+        #    back-pressure, no starvation under sustained overflow)
         words, lost = _spikes_to_events(spikes, t0, delays, cfg)
-        words = jnp.concatenate([pend.residue, words])
+        if can_defer:
+            slot = jnp.arange(cfg.capacity)[None, :]
+            held = (~sent_mask[:, None]) & (slot < pend.counts[:, None])
+            deferred_words = jnp.where(held, pend.data,
+                                       ev.INVALID_EVENT).reshape(-1)
+            words = jnp.concatenate([deferred_words, pend.residue, words])
+        else:
+            words = jnp.concatenate([pend.residue, words])
         from repro.kernels import fused_route_bucket as frb
         fw = frb.fused_route_aggregate(
             words, tables.dest_of_addr, tables.guid_of_addr, cfg.n_shards,
@@ -243,17 +296,29 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
             deadline_miss=miss.astype(jnp.int32),
             offered=fw.offered,
             deferred=fw.deferred,
+            link=lstats,
         )
-        return (state, PendingWindow(b.data, b.counts, fw.residue)), stats
+        return (state, PendingWindow(b.data, b.counts, fw.residue),
+                lstate), stats
 
-    def drain(state: ShardState, pend: PendingWindow, w_exc, w_inh):
+    def drain(state: ShardState, pend: PendingWindow, lstate: tp.LinkState,
+              w_exc, w_inh):
         """Flush the last window's buckets (its decode slot is the step
         after the scan ends; the final residue stays deferred and is
-        reported via the last window's ``deferred``)."""
-        state, miss = _decode(state, pend, w_exc, w_inh)
+        reported via the last window's ``deferred``).  Credits are
+        bypassed — the end-of-run flush quiesces the fabric, so no event
+        is stranded in a stalled bucket.  The drain exchange's LinkStats
+        are intentionally discarded: folding them into the last row would
+        break the per-row identities (offered_k == events_sent_{k-1},
+        offered == sent + deferred) that tests pin, so per-run link totals
+        cover the n_windows scanned exchanges only (deadline misses, a
+        pure accumulator with no such identity, ARE folded in)."""
+        recv, counts, _, _, _ = _exchange(pend, lstate,
+                                          enforce_credits=False)
+        state, miss = _decode(state, recv, counts, w_exc, w_inh)
         return state, miss.astype(jnp.int32)
 
-    return init_pending, body, drain
+    return init_pending, init_link, body, drain
 
 
 def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
@@ -284,7 +349,8 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
                          for t in tabs])
     bg = jnp.asarray(np.pad(bg_rates, (0, n_tot - len(bg_rates))).reshape(S, per))
 
-    init_pending, body, drain = make_pipeline_fns(cfg, axis_name=axis_name)
+    init_pending, init_link, body, drain = make_pipeline_fns(
+        cfg, axis_name=axis_name)
 
     def shard_fn(state, dest, guid, mcast, w_e, w_i, dl, bgr, n_windows):
         tables = RoutingTables(dest[0], guid[0], mcast[0])
@@ -294,10 +360,10 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
             return body(carry, tables, w_e[0], w_i[0], dl[0], bgr[0],
                         bg_weight)
 
-        (st, pend), stats = jax.lax.scan(win, (st, init_pending()), None,
-                                         length=n_windows)
+        (st, pend, lstate), stats = jax.lax.scan(
+            win, (st, init_pending(), init_link()), None, length=n_windows)
         # flush the final window's buckets (one extra decode step)
-        st, miss_d = drain(st, pend, w_e[0], w_i[0])
+        st, miss_d = drain(st, pend, lstate, w_e[0], w_i[0])
         if n_windows > 0:
             stats = stats._replace(
                 deadline_miss=stats.deadline_miss.at[-1].add(miss_d))

@@ -1,0 +1,33 @@
+"""Pluggable flush-window transports for the spike-exchange fabric.
+
+``create("alltoall" | "torus2d", n_shards=..., **opts)`` returns a
+:class:`~repro.transport.base.Transport`; see ``base`` for the contract,
+``alltoall`` for the packed single-collective backend and ``torus`` for the
+dimension-ordered neighbor-hop backend with credit-based link flow control.
+"""
+from __future__ import annotations
+
+from repro.transport.base import (LinkState, LinkStats, Transport,
+                                  TransportOut, zero_link_stats)
+
+BACKENDS = ("alltoall", "torus2d")
+
+
+def create(name: str, *, n_shards: int, **opts) -> Transport:
+    """Instantiate a transport backend by config key.
+
+    Options (torus2d): ``nx``/``ny`` mesh shape (0 = most-square
+    factorization), ``link_credits`` per-window event budget per egress
+    link (0 = unthrottled), ``notify_latency`` windows before spent
+    credits return, ``max_row_events`` largest bucket row the caller can
+    offer (fails fast if ``link_credits`` could never admit one).
+    """
+    if name == "alltoall":
+        from repro.transport.alltoall import AllToAllTransport
+        if opts:
+            raise TypeError(f"alltoall takes no options, got {opts}")
+        return AllToAllTransport(n_shards)
+    if name == "torus2d":
+        from repro.transport.torus import Torus2DTransport
+        return Torus2DTransport(n_shards, **opts)
+    raise ValueError(f"unknown transport {name!r} (want one of {BACKENDS})")

@@ -1,0 +1,121 @@
+"""Transport API — how a flush window's buckets reach their owners.
+
+A :class:`Transport` moves one flush window of per-destination bucket rows
+between the shards of a 1-D ``shard_map`` axis.  The caller hands over an
+opaque ``payload`` row per destination shard (packed u32 — events, or
+events|guids; the transport never looks inside) plus the per-row event
+``counts``, and receives the rows every other shard addressed to it, in
+source order — the same contract as ``jax.lax.all_to_all(..., tiled=True)``
+row semantics, which is exactly what the ``alltoall`` backend is.
+
+Backends:
+
+* ``alltoall`` (``repro.transport.alltoall``) — the packed single-collective
+  path extracted from ``repro.core.exchange``: one global ``all_to_all``
+  per window, no per-link model.
+* ``torus2d`` (``repro.transport.torus``) — torus-faithful: shards are
+  mapped onto a 2-D (x, y) device torus and every window travels via
+  dimension-ordered neighbor ``ppermute`` hops (X rings first, then Y) with
+  store-and-forward buffers and credit-based link flow control.  Congested
+  links *defer* whole bucket rows — ``sent_mask`` tells the caller which
+  rows must be re-offered next window through the overflow-residue
+  machinery.
+
+Both backends are pure functions of ``(state, payload, counts)`` so they
+can live inside a jitted ``lax.scan`` carry; ``LinkState`` is the carried
+per-link flow-control state (empty for ``alltoall``) and ``LinkStats`` the
+per-window observability record ridden alongside ``WindowStats``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.flow_control import CreditBank
+
+# Carried per-link flow-control state.  ``alltoall`` uses a zero-link bank
+# so the pytree structure is uniform across backends.
+LinkState = CreditBank
+
+
+class LinkStats(NamedTuple):
+    """Per-window link-level observability (all () i32, per shard).
+
+    The conservation identity, per shard and window::
+
+        offered_events == sent_events + deferred_events
+
+    and globally (summed over the axis) ``sum(sent) == sum(delivered)`` —
+    every admitted event arrives somewhere the same window; deferred events
+    are re-offered by the caller, never silently buffered.
+    """
+
+    offered_events: jax.Array    # events presented to the transport
+    sent_events: jax.Array       # events admitted into the fabric
+    deferred_events: jax.Array   # events credit-stalled (rows in sent_mask)
+    delivered_events: jax.Array  # events received by this shard
+    credit_stalls: jax.Array     # bucket rows deferred for lack of credits
+    hops: jax.Array              # neighbor hops executed this window
+    forwarded_bytes: jax.Array   # wire bytes shipped over links (all hops)
+    max_in_flight: jax.Array     # peak store-and-forward buffer occupancy
+
+
+def zero_link_stats() -> LinkStats:
+    z = jnp.zeros((), jnp.int32)
+    return LinkStats(z, z, z, z, z, z, z, z)
+
+
+def pack_payload(payload: jax.Array, counts: jax.Array) -> jax.Array:
+    """Append the bitcast count column: (..., W) + (...,) -> (..., W+1) u32.
+
+    Bitcast (not convert) keeps the i32 counts exact on the u32 wire.
+    """
+    cn = jax.lax.bitcast_convert_type(counts.astype(jnp.int32),
+                                      jnp.uint32)[..., None]
+    return jnp.concatenate([payload, cn], axis=-1)
+
+
+def unpack_payload(buf: jax.Array):
+    """Inverse of :func:`pack_payload` -> (payload, counts)."""
+    counts = jax.lax.bitcast_convert_type(buf[..., -1], jnp.int32)
+    return buf[..., :-1], counts
+
+
+class TransportOut(NamedTuple):
+    """Result of shipping one window through a transport backend."""
+
+    state: LinkState           # advanced flow-control state
+    recv_payload: jax.Array    # (n_shards, W) u32 — row s came from shard s
+    recv_counts: jax.Array     # (n_shards,) i32 events per received row
+    sent_mask: jax.Array       # (n_shards,) bool — False rows were deferred
+    stats: LinkStats
+
+
+class Transport:
+    """Base class: a window-granular bucket mover over a shard_map axis.
+
+    Subclasses implement :meth:`exchange`; ``init_state`` returns the
+    flow-control pytree threaded through successive windows.
+    """
+
+    name: str = "base"
+
+    def __init__(self, n_shards: int):
+        self.n_shards = n_shards
+
+    def init_state(self) -> LinkState:
+        from repro.core import flow_control as fc
+        return fc.init_credits(0, 0, 1)
+
+    def exchange(self, state: LinkState, payload: jax.Array,
+                 counts: jax.Array, *, axis_name: str,
+                 enforce_credits: bool = True) -> TransportOut:
+        """Ship window: payload (n_shards, W) u32, counts (n_shards,) i32.
+
+        Must be called inside ``shard_map`` over ``axis_name`` (axis size ==
+        ``n_shards``).  ``enforce_credits=False`` flushes regardless of
+        credit state (end-of-run drain).
+        """
+        raise NotImplementedError

@@ -1,0 +1,250 @@
+"""Torus-faithful transport: dimension-ordered neighbor hops with credit
+flow control (paper §1 + §2.1, applied to the jitted hot path).
+
+The Extoll fabric is a torus with dimension-ordered routing — a packet
+first walks its X ring to the destination column, then the Y ring to the
+destination row, taking the shortest signed direction on each ring (the
+same walk ``repro.core.torus.Torus.route`` enumerates on the host).  This
+backend reproduces that on a device mesh: the ``n_shards`` shards of the
+1-D shard_map axis are laid onto a 2-D (nx, ny) logical torus
+(``shard s -> (x = s % nx, y = s // nx)``, matching ``Torus.coords``) and
+each flush window travels exclusively via ``jax.lax.ppermute`` *neighbor*
+hops — the lowered HLO contains only collective-permutes, never an
+all-to-all.
+
+Per ring phase the algorithm is a bidirectional store-and-forward rotate:
+every node seeds two in-transit buffers (one per ring direction) indexed by
+absolute target coordinate, each hop ships the whole buffer one neighbor
+over, the arriving node absorbs the bundle addressed to it and forwards the
+rest.  After ``floor(n/2)`` forward and ``floor((n-1)/2)`` backward hops
+every bundle has been delivered via its shortest path, so hop counts equal
+``Torus.hops`` and per-window wire bytes decompose into per-link terms —
+the quantities ``core.torus.link_loads`` models on the host become
+measurable (``LinkStats``) in the jitted path.
+
+Flow control is the credit discipline of ``repro.core.flow_control``,
+vectorized over the node's four egress links (+x, -x, +y, -y) as a
+``CreditBank``: admitting a bucket row spends its event count on the
+first-hop link of its dimension-ordered route, and spent credits only
+return ``notify_latency`` windows later (the notification delay line).
+Rows that do not get credits are *deferred* — reported through
+``sent_mask`` so the caller re-offers them via the overflow-residue
+machinery instead of buffering unbounded data in the fabric.  Downstream
+links are modelled as provisioned store-and-forward buffers whose
+occupancy is reported as ``max_in_flight``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import aggregator
+from repro.core import flow_control as fc
+from repro.transport import base
+
+# egress link indices
+XP, XM, YP, YM = 0, 1, 2, 3
+N_LINKS = 4
+
+
+def default_shape(n_shards: int) -> tuple[int, int]:
+    """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
+    matching the paper's 2x4 concentrator face per wafer)."""
+    nx = max(int(math.isqrt(n_shards)), 1)
+    while n_shards % nx:
+        nx -= 1
+    return nx, n_shards // nx
+
+
+def _ring_perm(nx: int, ny: int, axis: str, step: int):
+    """(src, dst) pairs moving every shard one step along its X or Y ring."""
+    pairs = []
+    for s in range(nx * ny):
+        x, y = s % nx, s // nx
+        if axis == "x":
+            d = ((x + step) % nx) + y * nx
+        else:
+            d = x + ((y + step) % ny) * nx
+        pairs.append((s, d))
+    return pairs
+
+
+class Torus2DTransport(base.Transport):
+    """Dimension-ordered 2-D torus exchange with per-link credits.
+
+    nx * ny must equal ``n_shards``.  ``link_credits=0`` disables
+    throttling (links are provisioned far beyond any window's traffic);
+    a positive value is the per-window event budget of each egress link,
+    replenished ``notify_latency`` windows after being spent.  Credits
+    never exceed their initial limit, so ``link_credits`` must stay at or
+    above the largest possible bucket row — a bigger row could never be
+    admitted and would head-of-line-block its link forever.  Callers that
+    know their row bound pass it as ``max_row_events`` (the bucket
+    capacity; ``make_exchange`` and the simulator do) and construction
+    fails fast on a livelock-able configuration.
+    """
+
+    name = "torus2d"
+
+    def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
+                 link_credits: int = 0, notify_latency: int = 2,
+                 max_row_events: int = 0):
+        super().__init__(n_shards)
+        if 0 < link_credits < max_row_events:
+            raise ValueError(
+                f"link_credits ({link_credits}) must be >= the largest "
+                f"bucket row ({max_row_events} events): credits never "
+                f"exceed their initial limit, so an oversized row would "
+                f"head-of-line-block its egress link forever")
+        if not nx and not ny:
+            nx, ny = default_shape(n_shards)
+        elif not ny:
+            ny = n_shards // nx
+        elif not nx:
+            nx = n_shards // ny
+        if nx * ny != n_shards:
+            raise ValueError(f"mesh ({nx}, {ny}) != n_shards {n_shards}")
+        self.nx, self.ny = nx, ny
+        self.link_credits = int(link_credits)
+        self.notify_latency = int(notify_latency)
+        self._perm = {
+            "xp": _ring_perm(nx, ny, "x", +1),
+            "xm": _ring_perm(nx, ny, "x", -1),
+            "yp": _ring_perm(nx, ny, "y", +1),
+            "ym": _ring_perm(nx, ny, "y", -1),
+        }
+
+    # -- flow-control state ----------------------------------------------
+    def init_state(self) -> base.LinkState:
+        limit = self.link_credits if self.link_credits > 0 else 1 << 30
+        return fc.init_credits(N_LINKS, limit, self.notify_latency)
+
+    def _first_hop_link(self, my_x, my_y):
+        """Egress link of each destination row's dimension-ordered route
+        (-1 for the local row)."""
+        d = jnp.arange(self.n_shards)
+        fx = (d % self.nx - my_x) % self.nx
+        fy = (d // self.nx - my_y) % self.ny
+        lx = jnp.where(fx == 0, -1, jnp.where(fx <= self.nx // 2, XP, XM))
+        ly = jnp.where(fy == 0, -1, jnp.where(fy <= self.ny // 2, YP, YM))
+        return jnp.where(lx >= 0, lx, ly)
+
+    def _admit(self, state, counts, link):
+        """In-order (FIFO) whole-bucket admission per egress link.
+
+        Rows are admitted in destination order while the link's running
+        total stays within its credits; a row that does not fit blocks
+        every later row on the same link (head-of-line blocking — a
+        hardware link FIFO cannot reorder its queue), even if a smaller
+        row would still fit the remaining credits.
+        """
+        admitted = jnp.ones_like(link, dtype=bool)
+        spent = []
+        for l in range(N_LINKS):
+            on = link == l
+            csum = jnp.cumsum(jnp.where(on, counts, 0))
+            ok = csum <= state.credits[l]
+            admitted = jnp.where(on, ok, admitted)
+            spent.append(jnp.sum(jnp.where(on & ok, counts, 0)))
+        return admitted, jnp.stack(spent).astype(jnp.int32)
+
+    # -- one bidirectional ring phase -------------------------------------
+    def _ring_phase(self, bundles, axis_name, my_c, n, perm_p, perm_m,
+                    acc: dict):
+        """Rotate (n, B, W1) count-packed bundles (indexed by target ring
+        coordinate) to their owners; returns them indexed by *source* ring
+        coordinate.  ``acc`` accumulates LinkStats terms across phases."""
+        coord = jnp.arange(n)
+        fwd = (coord - my_c) % n
+        plus = (fwd >= 1) & (fwd <= n // 2)
+        minus = fwd > n // 2
+        vp = jnp.where(plus[:, None, None], bundles, jnp.uint32(0))
+        vm = jnp.where(minus[:, None, None], bundles, jnp.uint32(0))
+        recv = jnp.zeros_like(bundles)
+        recv = recv.at[my_c].set(jnp.take(bundles, my_c, axis=0))
+
+        def live_events(v):
+            return jnp.sum(lax.bitcast_convert_type(v[:, :, -1], jnp.int32))
+
+        def wire(v):
+            cnt = lax.bitcast_convert_type(v[:, :, -1], jnp.int32)
+            return aggregator.window_cost(cnt.reshape(-1)).bytes
+
+        for direction, v, perm, n_hops in (
+            ("+", vp, perm_p, n // 2),
+            ("-", vm, perm_m, (n - 1) // 2),
+        ):
+            for h in range(1, n_hops + 1):
+                acc["bytes"] += wire(v)
+                v = lax.ppermute(v, axis_name, perm)
+                src = (my_c - h) % n if direction == "+" else (my_c + h) % n
+                recv = recv.at[src].set(jnp.take(v, my_c, axis=0))
+                v = v.at[my_c].set(jnp.uint32(0))
+                acc["hops"] += 1
+                acc["in_flight"] = jnp.maximum(acc["in_flight"],
+                                               live_events(v))
+        # everything within shortest distance has been absorbed
+        return recv
+
+    # -- the full window ---------------------------------------------------
+    def exchange(self, state: base.LinkState, payload: jax.Array,
+                 counts: jax.Array, *, axis_name: str,
+                 enforce_credits: bool = True) -> base.TransportOut:
+        nx, ny, n = self.nx, self.ny, self.n_shards
+        w = payload.shape[1]
+        me = lax.axis_index(axis_name)
+        my_x, my_y = me % nx, me // nx
+        counts = counts.astype(jnp.int32)
+
+        # 1. injection: credit admission on the first-hop egress link
+        link = self._first_hop_link(my_x, my_y)
+        if enforce_credits:
+            admitted, spent = self._admit(state, counts, link)
+        else:
+            admitted = jnp.ones((n,), bool)
+            spent = jnp.zeros((N_LINKS,), jnp.int32)
+        state = fc.credit_tick(state, spent)
+        cnt_in = jnp.where(admitted, counts, 0)
+        packed = base.pack_payload(
+            jnp.where(admitted[:, None], payload, jnp.uint32(0)), cnt_in)
+
+        acc = {"bytes": jnp.int32(0), "hops": 0,
+               "in_flight": jnp.int32(0)}
+
+        # 2. X rings: bundle rows by destination column, rotate along x
+        bx = packed.reshape(ny, nx, w + 1).transpose(1, 0, 2)   # [dx, dy]
+        xrecv = self._ring_phase(bx, axis_name, my_x, nx,
+                                 self._perm["xp"], self._perm["xm"], acc)
+        # xrecv[sx, dy]: from source (sx, my_y), for destination (my_x, dy)
+
+        # 3. Y rings: regroup by destination row, rotate along y
+        by = xrecv.transpose(1, 0, 2)                           # [dy, sx]
+        yrecv = self._ring_phase(by, axis_name, my_y, ny,
+                                 self._perm["yp"], self._perm["ym"], acc)
+        # yrecv[sy, sx]: from source (sx, sy), for me
+
+        recv_payload, recv_counts = base.unpack_payload(
+            yrecv.reshape(n, w + 1))
+
+        offered = jnp.sum(counts).astype(jnp.int32)
+        sent = jnp.sum(cnt_in).astype(jnp.int32)
+        stats = base.LinkStats(
+            offered_events=offered,
+            sent_events=sent,
+            deferred_events=offered - sent,
+            delivered_events=jnp.sum(recv_counts).astype(jnp.int32),
+            credit_stalls=jnp.sum(~admitted & (counts > 0)).astype(jnp.int32),
+            hops=jnp.int32(acc["hops"]),
+            forwarded_bytes=acc["bytes"].astype(jnp.int32),
+            max_in_flight=acc["in_flight"].astype(jnp.int32),
+        )
+        return base.TransportOut(
+            state=state,
+            recv_payload=recv_payload,
+            recv_counts=recv_counts,
+            sent_mask=admitted,
+            stats=stats,
+        )

@@ -165,6 +165,64 @@ def test_fused_route_aggregate_matches_ref():
             assert (fw.buckets.counts == jnp.minimum(rc, c)).all()
 
 
+@pytest.mark.parametrize("n,d,c", [
+    (1000, 7, 33),          # the ROADMAP-named ragged case
+    (257, 13, 19),
+    (129, 5, 31),
+    (1000, 9, 124),
+    (63, 7, 1),
+])
+def test_fused_pallas_interpret_parity_ragged_shapes(n, d, c):
+    """Interpret-mode Pallas placement vs fused-XLA vs the sort oracle on
+    odd / non-power-of-two (N, D, C): destination tiling pads D to the
+    tile and the per-row `pl.ds` loads start at arbitrary offsets, so
+    ragged shapes are exactly where lane-alignment bugs would surface."""
+    from repro.kernels import fused_route_bucket as frb
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(n + d * c), 4)
+    words = ev.pack(jax.random.randint(k1, (n,), 0, 1 << 14),
+                    jax.random.randint(k2, (n,), 0, 1 << 15),
+                    valid=jax.random.bernoulli(k4, 0.9, (n,)))
+    dests = jax.random.randint(k3, (n,), -1, d)
+    guids = jax.random.randint(k4, (n,), 0, 64)
+    want = agg.aggregate(words, dests, guids, d, c, impl="sort")
+    got_xla = frb.fused_aggregate(words, dests, guids, d, c,
+                                  use_pallas=False)
+    got_pl = frb.fused_aggregate(words, dests, guids, d, c,
+                                 use_pallas=True, interpret=True)
+    for got in (got_xla, got_pl):
+        assert (got.buckets.data == want.data).all()
+        assert (got.buckets.guids == want.guids).all()
+        assert (got.buckets.counts == want.counts).all()
+        assert int(got.buckets.overflow) == int(want.overflow)
+
+
+@pytest.mark.parametrize("n,d,c", [(1000, 7, 33), (200, 11, 13)])
+def test_fused_route_pallas_interpret_parity_ragged_shapes(n, d, c):
+    """Same ragged-shape pin for the LUT-routed variant, whose guid gather
+    runs *inside* the Pallas kernel over the accepted rows only."""
+    from repro.core import routing as rt
+    from repro.kernels import fused_route_bucket as frb
+    n_addr = 96
+    projs = [rt.Projection(a, a + 1, dest_node=a % d, dest_links=[a % 3])
+             for a in range(0, n_addr, 2)]       # half the addrs unrouted
+    tabs = rt.build_tables(n_addr, projs, n_guid=64)
+    k = jax.random.PRNGKey(n * c)
+    words = ev.pack(jax.random.randint(k, (n,), 0, n_addr + 16),
+                    jax.random.randint(jax.random.fold_in(k, 1), (n,),
+                                       0, 1 << 15),
+                    valid=jax.random.bernoulli(
+                        jax.random.fold_in(k, 2), 0.9, (n,)))
+    fw_xla = frb.fused_route_aggregate(
+        words, tabs.dest_of_addr, tabs.guid_of_addr, d, c, use_pallas=False)
+    fw_pl = frb.fused_route_aggregate(
+        words, tabs.dest_of_addr, tabs.guid_of_addr, d, c, use_pallas=True,
+        interpret=True)
+    assert (fw_pl.buckets.data == fw_xla.buckets.data).all()
+    assert (fw_pl.buckets.guids == fw_xla.buckets.guids).all()
+    assert (fw_pl.buckets.counts == fw_xla.buckets.counts).all()
+    assert int(fw_pl.buckets.overflow) == int(fw_xla.buckets.overflow)
+
+
 def test_multiwindow_residue_carry_conservation():
     """Drive the fused kernel across windows re-offering the residue each
     time: every valid event is eventually accepted, dropped, or left in the

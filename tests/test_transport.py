@@ -1,0 +1,188 @@
+"""Transport subsystem tests (subprocess with forced host devices):
+
+* torus2d delivers bit-identical buckets to the alltoall backend on a
+  (2, 4) torus of 8 shards, and its lowered HLO contains ONLY neighbor
+  collective-permutes (no all-to-all) — the acceptance bar of the torus
+  transport PR.
+* Credit-based link flow control conserves events for random traffic and
+  tiny random credit budgets across many seeds:
+  offered == sent + deferred per shard/window, and globally
+  sum(sent) == sum(delivered) — the LinkStats extension of the
+  WindowStats identity in tests/test_pipeline.py.
+* The sharded simulator over torus2d reproduces the alltoall spike train
+  exactly when uncongested, and under congestion the transport-deferral /
+  residue re-offer chain balances window by window.
+"""
+import pytest
+
+from md_helper import run_md
+
+pytestmark = pytest.mark.slow
+
+
+def test_torus_matches_alltoall_and_neighbor_only_hlo():
+    out = run_md("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import events as ev, routing as rt
+from repro.core.exchange import make_exchange
+n_shards, N, C, n_addr = 8, 64, 16, 96
+mesh = jax.make_mesh((n_shards,), ("wafer",))
+tabs = []
+for s in range(n_shards):
+    projs = [rt.Projection(a, a+1, dest_node=(a * 5 + s) % n_shards,
+                           dest_links=[a % 3, 7]) for a in range(n_addr)]
+    tabs.append(rt.build_tables(n_addr, projs, n_guid=64))
+stacked = rt.RoutingTables(
+    dest_of_addr=jnp.stack([t.dest_of_addr for t in tabs]),
+    guid_of_addr=jnp.stack([t.guid_of_addr for t in tabs]),
+    mcast_of_guid=jnp.stack([t.mcast_of_guid for t in tabs]))
+addr = jax.random.randint(jax.random.PRNGKey(0), (n_shards, N), 0, n_addr)
+ts = jax.random.randint(jax.random.PRNGKey(1), (n_shards, N), 0, 1000)
+words = ev.pack(addr, ts)
+runs = {}
+for backend, opts in [("alltoall", None), ("torus2d", {"nx": 2, "ny": 4})]:
+    run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
+                        n_addr_per_shard=n_addr, transport=backend,
+                        transport_opts=opts)
+    runs[backend] = (run, run(words, stacked))
+a, t = runs["alltoall"][1], runs["torus2d"][1]
+# bit-identical delivered event multisets (in fact identical buffers)
+assert (np.asarray(a.recv_events) == np.asarray(t.recv_events)).all()
+assert (np.asarray(a.recv_guids) == np.asarray(t.recv_guids)).all()
+assert (np.asarray(a.recv_counts) == np.asarray(t.recv_counts)).all()
+assert (np.asarray(a.link_events) == np.asarray(t.link_events)).all()
+assert np.asarray(t.sent_mask).all()
+# torus wire model: every hop pays -> forwarded bytes >= crossbar bytes
+assert int(np.asarray(t.link.forwarded_bytes).sum()) >= \\
+    int(np.asarray(a.link.forwarded_bytes).sum())
+# HLO: torus lowers to neighbor collective-permutes ONLY, no all-to-all
+txt = jax.jit(runs["torus2d"][0]).lower(words, stacked).as_text()
+n_a2a = txt.count("all_to_all") + txt.count("all-to-all")
+n_cp = txt.count("collective_permute") + txt.count("collective-permute")
+assert n_a2a == 0, f"torus2d must not lower an all-to-all ({n_a2a})"
+assert n_cp > 0, "torus2d must lower neighbor collective-permutes"
+# dimension-ordered shortest-path hop count for a (2, 4) torus:
+# x: 1 forward; y: 2 forward + 1 backward  ->  4 permutes
+assert n_cp == 4, n_cp
+txt_a = jax.jit(runs["alltoall"][0]).lower(words, stacked).as_text()
+assert txt_a.count("all_to_all") + txt_a.count("all-to-all") == 1
+print("TORUS_EQUIV_OK")
+""")
+    assert "TORUS_EQUIV_OK" in out
+
+
+def test_torus_credit_conservation_property():
+    """offered == sent + deferred per shard+window and global
+    sum(sent) == sum(delivered), for random traffic against tiny random
+    per-link credit budgets, with the credit state threaded across
+    windows; credits never go negative."""
+    out = run_md("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro import transport
+from repro.core import flow_control as fc
+
+D, W = 8, 6
+mesh = jax.make_mesh((D,), ("wafer",))
+t = transport.create("torus2d", n_shards=D, nx=2, ny=4, link_credits=1,
+                     notify_latency=2)
+
+def body(lstate, p, c):
+    lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+    out = t.exchange(lstate, p[0], c[0], axis_name="wafer")
+    return jax.tree_util.tree_map(
+        lambda x: x[None], (out.state, out.recv_counts, out.sent_mask,
+                            out.stats))
+
+spec = P("wafer")
+fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                       out_specs=spec, check_rep=False))
+
+rng = np.random.default_rng(0)
+any_deferred = False
+for seed in range(12):
+    limit = int(rng.integers(5, 80))
+    credits = jnp.full((D, 4), limit, jnp.int32)
+    pending = jnp.zeros((D, 4, 2), jnp.int32)
+    lstate = fc.CreditBank(credits=credits, pending=pending)
+    for win in range(4):
+        counts = jnp.asarray(rng.integers(0, 30, (D, D)), jnp.int32)
+        payload = jnp.asarray(
+            rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
+        lstate, rcnt, mask, st = fn(lstate, payload, counts)
+        off, sent = np.asarray(st.offered_events), np.asarray(st.sent_events)
+        defr = np.asarray(st.deferred_events)
+        assert (off == sent + defr).all(), (seed, win)
+        assert sent.sum() == np.asarray(st.delivered_events).sum()
+        assert np.asarray(rcnt).sum() == sent.sum()
+        # deferred rows really were withheld: mask rows account for defr
+        held = np.where(np.asarray(mask), 0, np.asarray(counts)).sum(1)
+        assert (held == defr).all()
+        assert (np.asarray(lstate.credits) >= 0).all()
+        any_deferred = any_deferred or defr.sum() > 0
+assert any_deferred, "tiny credits never stalled a link -- unexercised"
+# ample credits -> nothing deferred, everything delivered
+lstate = fc.CreditBank(credits=jnp.full((D, 4), 1 << 30, jnp.int32),
+                       pending=jnp.zeros((D, 4, 2), jnp.int32))
+counts = jnp.asarray(rng.integers(0, 30, (D, D)), jnp.int32)
+payload = jnp.asarray(rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
+_, rcnt, mask, st = fn(lstate, payload, counts)
+assert np.asarray(mask).all()
+assert np.asarray(st.deferred_events).sum() == 0
+assert np.asarray(rcnt).sum() == np.asarray(counts).sum()
+print("CONSERVATION_OK")
+""")
+    assert "CONSERVATION_OK" in out
+
+
+def test_simulator_torus_equivalence_and_backpressure():
+    out = run_md("""
+import jax, numpy as np
+from repro.snn import microcircuit as mc, network, simulator as sim
+spec = mc.MicrocircuitSpec(scale=0.003)
+w, is_inh = spec.weight_matrix()
+part = network.build_partition(w, is_inh, n_shards=4)
+mesh = jax.make_mesh((4,), ("wafer",))
+
+def run(transport, link_credits=0, capacity=512, n_windows=8):
+    cfg = sim.SimConfig(n_shards=4, per_shard=part.per_shard,
+                        max_fan=part.fanout.shape[1], window=8, ring_len=32,
+                        e_max=256, capacity=capacity, transport=transport,
+                        link_credits=link_credits, notify_latency=2)
+    init, runf = sim.build_sharded_sim(mesh, "wafer", cfg, part,
+                                       spec.bg_rates())
+    st, stats = runf(init(0), n_windows)
+    return jax.tree_util.tree_map(np.asarray, stats)
+
+# 1. uncongested torus == alltoall, window for window
+sa, st = run("alltoall"), run("torus2d")
+assert sa.spikes.sum() > 0
+assert (sa.spikes == st.spikes).all()
+assert (sa.events_sent == st.events_sent).all()
+assert sa.deadline_miss.sum() == 0 and st.deadline_miss.sum() == 0
+assert st.link.credit_stalls.sum() == 0
+assert (st.link.hops > 0)[:, 1:].all()
+
+# 2. tiny credits: back-pressure engages; the deferral chain balances
+# (link_credits must stay >= capacity -- the admission invariant)
+sc = run("torus2d", link_credits=40, capacity=32, n_windows=12)
+link = sc.link
+assert link.credit_stalls.sum() > 0, "credit back-pressure unexercised"
+assert (link.offered_events ==
+        link.sent_events + link.deferred_events).all()
+assert (link.sent_events.sum(0) == link.delivered_events.sum(0)).all()
+# the exchange at iteration k ships window k-1's aggregated buckets
+assert (link.offered_events[:, 1:] == sc.events_sent[:, :-1]).all()
+assert (link.offered_events[:, 0] == 0).all()
+# transport-deferred events re-enter the same row's aggregation:
+# fresh_k = offered_k - residue_{k-1} - link_deferred_k >= 0
+defr_prev = np.concatenate(
+    [np.zeros((4, 1), sc.deferred.dtype), sc.deferred[:, :-1]], axis=1)
+fresh = sc.offered - defr_prev - link.deferred_events
+assert (fresh >= 0).all()
+# aggregation-level identity still balances on every row
+assert (sc.offered == sc.events_sent + sc.deferred + sc.overflow).all()
+print("SIM_TORUS_OK")
+""", n_devices=4)
+    assert "SIM_TORUS_OK" in out
