@@ -1,12 +1,15 @@
-"""Flush-window transport head-to-head: alltoall vs torus2d (paper §1/§3).
+"""Flush-window transport head-to-head: alltoall vs torus2d vs torus3d
+(paper §1/§3).
 
 One exchange window (fused route+aggregate + ship + multicast) per
-backend on a (2, 4) torus of 8 shards, plus a credit-throttled torus2d
-variant so the stall path is exercised.  Needs 8 devices, so the timed
-work runs in a subprocess with ``xla_force_host_platform_device_count=8``
-(the harness process has already initialized single-device jax);
-results feed ``BENCH_transport.json`` with backend, mesh shape,
-median_ms, events_per_s and credit_stalls per row.
+backend on 8 shards — crossbar, (2, 4) 2-D torus and (2, 2, 2) 3-D torus
+— plus credit-throttled torus variants so the hop-by-hop stall path is
+exercised.  Needs 8 devices, so the timed work runs in a subprocess with
+``xla_force_host_platform_device_count=8`` (the harness process has
+already initialized single-device jax); results feed
+``BENCH_transport.json`` with backend, mesh shape, median_ms,
+events_per_s and credit_stalls per row (see docs/benchmarks.md for the
+full schema).
 """
 from __future__ import annotations
 
@@ -31,6 +34,7 @@ n_shards, n_addr = 8, 1024
 N, C, iters = params["n"], params["c"], params["iters"]
 mesh = make_wafer_mesh(n_shards)
 nx, ny = wafer_torus_shape(n_shards)
+n3 = wafer_torus_shape(n_shards, ndim=3)
 tabs = []
 for s in range(n_shards):
     projs = [rt.Projection(a, a + 1, dest_node=(a * 7 + s) % n_shards,
@@ -56,26 +60,33 @@ def median_ms(fn, *args):
     return ts[len(ts) // 2] * 1e3
 
 rows = []
-cases = [("alltoall", None, ""),
-         ("torus2d", {"nx": nx, "ny": ny}, ""),
-         ("torus2d", {"nx": nx, "ny": ny, "link_credits": params["credits"]},
-          "+credits")]
-for backend, opts, tag in cases:
+cr = params["credits"]
+cases = [("alltoall", None, "", "crossbar"),
+         ("torus2d", {"nx": nx, "ny": ny}, "", "%dx%d" % (nx, ny)),
+         ("torus2d", {"nx": nx, "ny": ny, "link_credits": cr},
+          "+credits", "%dx%d" % (nx, ny)),
+         ("torus3d", {"nx": n3[0], "ny": n3[1], "nz": n3[2]}, "",
+          "%dx%dx%d" % n3),
+         ("torus3d", {"nx": n3[0], "ny": n3[1], "nz": n3[2],
+                      "link_credits": cr}, "+credits", "%dx%dx%d" % n3)]
+for backend, opts, tag, meshname in cases:
     run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
                         n_addr_per_shard=n_addr, transport=backend,
                         transport_opts=opts)
     out = run(words, stacked)
     med = median_ms(run, words, stacked)
     sent = int(np.asarray(out.link.sent_events).sum())
+    sbh = np.asarray(out.link.stalled_by_hop).sum(0)
     rows.append({
         "backend": backend + tag,
-        "mesh": "%dx%d" % (nx, ny) if backend == "torus2d" else "crossbar",
+        "mesh": meshname,
         "shape": "S=8 N={} C={}".format(N, C),
         "median_ms": med,
         "events_per_s": sent / (med * 1e-3) if med > 0 else 0.0,
         "credit_stalls": int(np.asarray(out.link.credit_stalls).sum()),
         "hops": int(np.asarray(out.link.hops)[0]),
         "forwarded_bytes": int(np.asarray(out.link.forwarded_bytes).sum()),
+        "stalled_by_hop": [int(v) for v in sbh],
     })
 print("BENCH_JSON " + json.dumps(rows))
 '''
@@ -111,4 +122,5 @@ def main(report) -> None:
                 "credit_stalls": row["credit_stalls"],
                 "hops": row["hops"],
                 "forwarded_bytes": row["forwarded_bytes"],
+                "stalled_by_hop": row["stalled_by_hop"],
             })

@@ -19,9 +19,10 @@ Modules:
   bench_microcircuit paper §4 target workload
   bench_moe_dispatch beyond-paper: bucket dispatch as MoE EP
   bench_kernels      Pallas kernel cost models
-  bench_transport    alltoall vs torus2d flush-window backends head-to-head
-                     (8 forced host devices in a subprocess; rows carry
-                     backend, mesh shape and credit_stalls)
+  bench_transport    alltoall vs torus2d vs torus3d flush-window backends
+                     head-to-head (8 forced host devices in a subprocess;
+                     rows carry backend, mesh shape, credit_stalls and the
+                     hop-by-hop stall breakdown)
 """
 from __future__ import annotations
 

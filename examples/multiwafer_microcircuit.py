@@ -7,10 +7,12 @@ efficiency, deadline misses) — the numbers the Extoll link budget cares
 about — plus per-population firing rates.
 
 NOTE: must run as its own process (forces 4 host devices).
-Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py [torus2d]
+Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py [torus2d|torus3d]
 (arg selects the transport backend; default "alltoall".  "torus2d" walks
-dimension-ordered neighbor hops on a 2x2 device torus and reports the
-link-level hop/forwarding stats.)
+dimension-ordered neighbor hops on a 2x2 device torus, "torus3d" on a
+1x2x2 torus whose Z rings are the wafer-stacking axis; both report the
+link-level hop/forwarding stats with hop-by-hop credit flow control
+available via the config's link_credits.)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -47,6 +49,8 @@ def main(transport: str = "alltoall"):
     )
     if transport == "torus2d":
         print(f"transport: {transport} {wafer_torus_shape(4)} torus")
+    elif transport == "torus3d":
+        print(f"transport: {transport} {wafer_torus_shape(4, ndim=3)} torus")
     else:
         print(f"transport: {transport}")
     mesh = make_wafer_mesh(4)
@@ -74,7 +78,7 @@ def main(transport: str = "alltoall"):
           f"-> bucket aggregation saves "
           f"{int(naive.bytes) / max(int(wire), 1):.1f}x")
     print(f"deadline misses: {int(miss)}   bucket overflows: {int(ovf)}")
-    if transport == "torus2d":
+    if transport in ("torus2d", "torus3d"):
         link = stats.link
         print(f"torus link stats: {int(np.asarray(link.hops)[0, 0])} "
               f"hops/window, "

@@ -18,12 +18,16 @@ class BrainScaleSConfig:
     fpga_clock_mhz: float = 210.0
     microcircuit_scale: float = 1.0
     # flush-window transport (repro.transport): "alltoall" ships one global
-    # collective per window; "torus2d" walks dimension-ordered neighbor
-    # hops over a (torus_nx, torus_ny) device torus with credit-based link
-    # flow control (link_credits events/window/egress-link, 0 = off).
+    # collective per window; "torus2d" / "torus3d" walk dimension-ordered
+    # neighbor hops over a (torus_nx, torus_ny[, torus_nz]) device torus
+    # with hop-by-hop credit-based link flow control (link_credits
+    # events/window per directed egress link, spent on every hop of a
+    # row's route, 0 = off).  torus3d's Z rings are the wafer-stacking
+    # axis — the paper's full arrangement is (2, 4, n_wafers).
     transport: str = "alltoall"
-    torus_nx: int = 0                # 0 = most-square auto factorization
+    torus_nx: int = 0                # 0 = most-square/cubic factorization
     torus_ny: int = 0
+    torus_nz: int = 0                # wafer axis (torus3d only)
     link_credits: int = 0
     notify_latency: int = 2
 
@@ -31,7 +35,8 @@ class BrainScaleSConfig:
         """The transport-selection kwargs of ``snn.simulator.SimConfig``
         (pass as ``SimConfig(..., **cfg.transport_fields())``)."""
         return dict(transport=self.transport, torus_nx=self.torus_nx,
-                    torus_ny=self.torus_ny, link_credits=self.link_credits,
+                    torus_ny=self.torus_ny, torus_nz=self.torus_nz,
+                    link_credits=self.link_credits,
                     notify_latency=self.notify_latency)
 
 

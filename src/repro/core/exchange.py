@@ -14,16 +14,18 @@ One "wafer shard" per mesh device along a named axis.  A flush window is:
                      ``all_to_all`` per window; the fabric as a crossbar,
                      paying the latency-bound hop once, exactly like the
                      paper amortizes the Extoll packet header over a bucket.
-                   * ``"torus2d"`` — torus-faithful: shards fold onto a 2-D
-                     (x, y) device torus and each window travels via
-                     dimension-ordered neighbor ``ppermute`` hops (X rings,
-                     then Y) through store-and-forward buffers, governed by
-                     credit-based link flow control (§2.1's notification
-                     credits, per egress link).  The lowered HLO contains
-                     only neighbor collective-permutes — per-link hop
-                     latency, bandwidth and back-pressure become visible
-                     (``LinkStats``) instead of being averaged away by a
-                     global collective.
+                   * ``"torus2d"`` / ``"torus3d"`` — torus-faithful: shards
+                     fold onto a 2-D (x, y) or 3-D (x, y, z) device torus
+                     and each window travels via dimension-ordered neighbor
+                     ``ppermute`` hops (X rings, then Y, then Z — the wafer
+                     axis) through store-and-forward buffers, governed by
+                     hop-by-hop credit-based link flow control (§2.1's
+                     notification credits, on EVERY egress link of the
+                     route — transit links included).  The lowered HLO
+                     contains only neighbor collective-permutes — per-link
+                     hop latency, bandwidth and mid-route back-pressure
+                     become visible (``LinkStats``) instead of being
+                     averaged away by a global collective.
 
   3. **multicast** — destination-side GUID lookup -> multicast mask,
                    replaying events onto local HICANN links       (§3, LUT 2)
@@ -32,8 +34,9 @@ All stages run inside ``shard_map`` so the collectives are explicit and the
 roofline's collective term can be read straight off the lowered HLO.
 
 Overflow and back-pressure share one policy: events beyond a bucket's
-capacity — and, under ``torus2d``, whole buckets refused by a congested
-egress link (``sent_mask``) — are *deferred* to the next window through the
+capacity — and, under the torus backends, whole buckets refused by a
+congested link anywhere on their route (``sent_mask``) — are *deferred* to
+the next window through the
 caller's residue machinery rather than buffered unboundedly in the fabric.
 Tests assert conservation at both levels: aggregation
 (``offered == sent + deferred + dropped``) and transport
@@ -143,7 +146,8 @@ def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
                   transport_opts: dict | None = None):
     """Build the jitted multi-shard exchange.
 
-    ``transport`` selects the backend (``"alltoall" | "torus2d"``);
+    ``transport`` selects the backend
+    (``"alltoall" | "torus2d" | "torus3d"``);
     ``transport_opts`` are forwarded to :func:`repro.transport.create`
     (torus mesh shape, link credits...).  Returns
     f(words[(n_shards, N)], tables[stacked over shard dim]) -> ExchangeOut
@@ -155,7 +159,7 @@ def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
     from jax.experimental.shard_map import shard_map
 
     transport_opts = dict(transport_opts or {})
-    if transport == "torus2d":
+    if transport in ("torus2d", "torus3d"):
         # a bucket row holds up to `capacity` events; the backend raises
         # if link_credits could never admit a full row (livelock guard)
         transport_opts.setdefault("max_row_events", capacity)

@@ -21,8 +21,27 @@ This module models that discipline functionally:
 The same discipline is used at three places in the framework: the
 host→device data-pipeline prefetch (``repro.data.pipeline``), the serving
 engine's response ring (``repro.serve.engine``), and — vectorized over the
-egress links of a torus node via ``CreditBank`` — the per-link flow control
-of the torus transport backend (``repro.transport.torus``).
+egress links of *every* torus node via ``CreditBank`` — the hop-by-hop
+link flow control of the torus transport backends
+(``repro.transport.torus``).
+
+Credit / notification-delay semantics (the §2.1 contract every user of
+this module relies on):
+
+* A link starts with ``limit`` credits and credits NEVER exceed that
+  initial limit — there is no credit creation, only circulation.
+* Spending is synchronous and may never overdraw: callers must ensure
+  ``spent <= credits`` at the moment of the spend (the transports enforce
+  this by refusing — deferring — any row that does not fit).
+* Spent credits are not destroyed; they enter a delay line of length
+  ``notify_latency`` and return to the producer that many steps later
+  (the FPGA's notification round-trip).  ``notify_latency=0`` means the
+  notification is instantaneous: the refund lands within the same
+  :func:`credit_tick`, i.e. credits are only a rate limit *within* one
+  window, never across windows.
+* Conservation: ``credits + pending.sum()`` is invariant under
+  :func:`credit_tick` — every credit is either available or in flight as
+  a notification.  Tests pin this identity.
 """
 from __future__ import annotations
 
@@ -106,16 +125,30 @@ class CreditBank(NamedTuple):
     credits: (K,) i32 — units the producer may still inject per link
     pending: (K, L) i32 — spent units travelling back as notifications;
              column 0 is delivered by the next :func:`credit_tick`.
+    epoch:   () i32 — count of past ticks on which anything was spent (a
+             "progress round").  Arbiters key fairness rotation off this
+             rather than wall-clock windows so the rotation cannot
+             phase-lock with the credit refund cycle (see the round-robin
+             admission of ``repro.transport.torus``).
     """
 
     credits: jax.Array
     pending: jax.Array
+    epoch: jax.Array
 
 
 def init_credits(n_links: int, limit: int, notify_latency: int) -> CreditBank:
+    """Fresh bank: ``limit`` credits on each of ``n_links`` links.
+
+    ``notify_latency=0`` yields a zero-length delay line — notifications
+    are instantaneous and :func:`credit_tick` refunds the spend within the
+    same call (credits still cap a single window's traffic, but nothing
+    carries over between windows).
+    """
     return CreditBank(
         credits=jnp.full((n_links,), limit, jnp.int32),
-        pending=jnp.zeros((n_links, max(notify_latency, 1)), jnp.int32),
+        pending=jnp.zeros((n_links, max(notify_latency, 0)), jnp.int32),
+        epoch=jnp.int32(0),
     )
 
 
@@ -126,12 +159,16 @@ def credit_tick(bank: CreditBank, spent: jax.Array) -> CreditBank:
     tail and returns as producer credit ``notify_latency`` windows later —
     the same producer/consumer/tick cycle as ``RingState``, batched to one
     call per flush window.  Callers must ensure ``spent <= credits``.
+    Invariant: ``credits + pending.sum()`` is unchanged by this call.
     """
+    spent = spent.astype(jnp.int32)
+    epoch = bank.epoch + (jnp.sum(spent) > 0).astype(jnp.int32)
+    if bank.pending.shape[-1] == 0:      # notify_latency == 0: refund now
+        return bank._replace(epoch=epoch)
     arrived = bank.pending[:, 0]
-    pending = jnp.roll(bank.pending, -1, axis=1).at[:, -1].set(
-        spent.astype(jnp.int32))
-    credits = bank.credits - spent.astype(jnp.int32) + arrived
-    return CreditBank(credits=credits, pending=pending)
+    pending = jnp.roll(bank.pending, -1, axis=1).at[:, -1].set(spent)
+    credits = bank.credits - spent + arrived
+    return CreditBank(credits=credits, pending=pending, epoch=epoch)
 
 
 class RunStats(NamedTuple):

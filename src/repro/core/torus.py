@@ -78,6 +78,27 @@ class Torus:
             path.append(int(self.node_id(dx, dy, z)))
         return path
 
+    def link_dir(self, u: int, v: int) -> int:
+        """Direction index 0..5 (x+, x-, y+, y-, z+, z-) of the single ring
+        hop u -> v; raises if the nodes are not ring neighbors."""
+        ux, uy, uz = (int(c) for c in self.coords(u))
+        vx, vy, vz = (int(c) for c in self.coords(v))
+        if (uy, uz) == (vy, vz) and ux != vx:
+            return 0 if (vx - ux) % self.nx == 1 else 1
+        if (ux, uz) == (vx, vz) and uy != vy:
+            return 2 if (vy - uy) % self.ny == 1 else 3
+        if (ux, uy) == (vx, vy) and uz != vz:
+            return 4 if (vz - uz) % self.nz == 1 else 5
+        raise ValueError(f"{u} -> {v} is not a single ring hop")
+
+    def route_links(self, src: int, dst: int) -> list:
+        """The dimension-ordered route as ordered (node, direction) egress
+        links — the per-hop credit accounting unit of the torus transports
+        (``repro.transport.torus`` spends ``count`` credits on every one of
+        these links to admit a bucket row)."""
+        path = self.route(src, dst)
+        return [(u, self.link_dir(u, v)) for u, v in zip(path[:-1], path[1:])]
+
     def hops(self, src, dst) -> np.ndarray:
         """Vectorized hop count (sum of shortest ring distances per axis)."""
         sx, sy, sz = self.coords(np.asarray(src))

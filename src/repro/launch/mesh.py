@@ -8,10 +8,11 @@ inter-pod DCN — the BrainScaleS wafer-to-wafer hop (paper Fig. 1).
 The spike fabric runs on a 1-D ``"wafer"`` axis
 (:func:`make_wafer_mesh`); how a flush window crosses it is the
 *transport* choice (``repro.transport``): ``"alltoall"`` treats the axis
-as a crossbar (one global collective), ``"torus2d"`` folds it onto
-(nx, ny) rings (:func:`wafer_torus_shape`) and ships neighbor
-``ppermute`` hops with credit-based link flow control — the same
-coordinates ``core.torus`` reasons about on the host.
+as a crossbar (one global collective), ``"torus2d"`` / ``"torus3d"`` fold
+it onto (nx, ny[, nz]) rings (:func:`wafer_torus_shape`) and ship
+neighbor ``ppermute`` hops with hop-by-hop credit-based link flow
+control — the same coordinates ``core.torus`` reasons about on the host
+(``torus3d``'s Z rings are the wafer-stacking axis).
 
 NOTE: functions, not module constants — importing this module must never
 touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
@@ -44,9 +45,16 @@ def make_wafer_mesh(n_shards: int, axis: str = "wafer"):
     return jax.make_mesh((n_shards,), (axis,))
 
 
-def wafer_torus_shape(n_shards: int) -> tuple:
-    """(nx, ny) rings the torus2d transport folds ``n_shards`` onto —
-    most-square factorization; 8 shards -> (2, 4), the paper's per-wafer
-    concentrator face."""
-    from repro.transport.torus import default_shape
+def wafer_torus_shape(n_shards: int, ndim: int = 2) -> tuple:
+    """The rings a torus transport folds ``n_shards`` onto.
+
+    ``ndim=2``: most-square (nx, ny); 8 shards -> (2, 4), the paper's
+    per-wafer concentrator face.  ``ndim=3``: most-cubic (nx, ny, nz);
+    8 shards -> (2, 2, 2).  Wafer-stacked deployments that want the
+    paper's (2, 4, n_wafers) arrangement pass the shape explicitly via
+    ``torus_nx``/``ny``/``nz`` instead.
+    """
+    from repro.transport.torus import default_shape, default_shape3d
+    if ndim == 3:
+        return default_shape3d(n_shards)
     return default_shape(n_shards)

@@ -13,9 +13,10 @@ backend's link flow-control state.  Iteration k:
 
   1. exchange+decode window k-1's pending buckets through the configured
      transport (``cfg.transport``: ``"alltoall"`` ships ONE packed
-     collective per window; ``"torus2d"`` walks dimension-ordered neighbor
-     ``ppermute`` hops over a 2-D device torus under credit-based link flow
-     control — see ``repro.transport``) and scatter their weighted input
+     collective per window; ``"torus2d"`` / ``"torus3d"`` walk
+     dimension-ordered neighbor ``ppermute`` hops over a 2-D / 3-D device
+     torus under hop-by-hop credit-based link flow control — see
+     ``repro.transport``) and scatter their weighted input
      into the delay ring; this happens at the same systemtime as the
      unpipelined formulation (the start of window k == the end of window
      k-1), so deadline semantics are unchanged.  Bucket rows refused by a
@@ -66,9 +67,11 @@ class SimConfig(NamedTuple):
     params: lif.LIFParams = lif.LIFParams()
     residue: int = 256        # deferred-event carry buffer (re-offered)
     transport: str = "alltoall"   # flush-window backend (see repro.transport)
-    torus_nx: int = 0         # torus2d mesh shape (0 = auto-factorize)
+    torus_nx: int = 0         # torus mesh shape (0 = auto-factorize)
     torus_ny: int = 0
-    link_credits: int = 0     # per-window events per egress link (0 = off)
+    torus_nz: int = 0         # wafer (Z) axis — torus3d only
+    link_credits: int = 0     # per-window events per egress link (0 = off;
+                              #   spent on EVERY hop of a row's route)
     notify_latency: int = 2   # windows before spent link credits return
 
 
@@ -211,17 +214,20 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
     """
     if axis_name is not None:
         opts = {}
-        if cfg.transport == "torus2d":
+        if cfg.transport in ("torus2d", "torus3d"):
             opts = dict(nx=cfg.torus_nx, ny=cfg.torus_ny,
                         link_credits=cfg.link_credits,
                         notify_latency=cfg.notify_latency,
                         max_row_events=cfg.capacity)  # livelock guard
+            if cfg.transport == "torus3d":
+                opts["nz"] = cfg.torus_nz
         backend = tp.create(cfg.transport, n_shards=cfg.n_shards, **opts)
     else:
         backend = tp.Transport(cfg.n_shards)      # state-only stub
     # can the transport ever refuse a bucket?  (static: gates the
     # deferred-word re-offer plumbing out of the alltoall/uncredited path)
-    can_defer = (axis_name is not None and cfg.transport == "torus2d"
+    can_defer = (axis_name is not None
+                 and cfg.transport in ("torus2d", "torus3d")
                  and cfg.link_credits > 0)
 
     def init_pending() -> PendingWindow:

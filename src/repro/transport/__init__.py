@@ -1,26 +1,29 @@
 """Pluggable flush-window transports for the spike-exchange fabric.
 
-``create("alltoall" | "torus2d", n_shards=..., **opts)`` returns a
-:class:`~repro.transport.base.Transport`; see ``base`` for the contract,
-``alltoall`` for the packed single-collective backend and ``torus`` for the
-dimension-ordered neighbor-hop backend with credit-based link flow control.
+``create("alltoall" | "torus2d" | "torus3d", n_shards=..., **opts)``
+returns a :class:`~repro.transport.base.Transport`; see ``base`` for the
+contract, ``alltoall`` for the packed single-collective backend and
+``torus`` for the dimension-ordered neighbor-hop backends with hop-by-hop
+credit-based link flow control (``torus3d`` adds the wafer Z axis).
 """
 from __future__ import annotations
 
 from repro.transport.base import (LinkState, LinkStats, Transport,
                                   TransportOut, zero_link_stats)
 
-BACKENDS = ("alltoall", "torus2d")
+BACKENDS = ("alltoall", "torus2d", "torus3d")
 
 
 def create(name: str, *, n_shards: int, **opts) -> Transport:
     """Instantiate a transport backend by config key.
 
-    Options (torus2d): ``nx``/``ny`` mesh shape (0 = most-square
-    factorization), ``link_credits`` per-window event budget per egress
-    link (0 = unthrottled), ``notify_latency`` windows before spent
-    credits return, ``max_row_events`` largest bucket row the caller can
-    offer (fails fast if ``link_credits`` could never admit one).
+    Options (torus2d / torus3d): ``nx``/``ny``[/``nz``] mesh shape (0 =
+    most-square / most-cubic factorization), ``link_credits`` per-window
+    event budget of EVERY directed egress link in the fabric (0 =
+    unthrottled; admission spends on each hop of the dimension-ordered
+    route), ``notify_latency`` windows before spent credits return,
+    ``max_row_events`` largest bucket row the caller can offer (fails
+    fast if ``link_credits`` could never admit one).
     """
     if name == "alltoall":
         from repro.transport.alltoall import AllToAllTransport
@@ -30,4 +33,7 @@ def create(name: str, *, n_shards: int, **opts) -> Transport:
     if name == "torus2d":
         from repro.transport.torus import Torus2DTransport
         return Torus2DTransport(n_shards, **opts)
+    if name == "torus3d":
+        from repro.transport.torus import Torus3DTransport
+        return Torus3DTransport(n_shards, **opts)
     raise ValueError(f"unknown transport {name!r} (want one of {BACKENDS})")

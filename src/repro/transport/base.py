@@ -13,18 +13,30 @@ Backends:
 * ``alltoall`` (``repro.transport.alltoall``) — the packed single-collective
   path extracted from ``repro.core.exchange``: one global ``all_to_all``
   per window, no per-link model.
-* ``torus2d`` (``repro.transport.torus``) — torus-faithful: shards are
-  mapped onto a 2-D (x, y) device torus and every window travels via
-  dimension-ordered neighbor ``ppermute`` hops (X rings first, then Y) with
-  store-and-forward buffers and credit-based link flow control.  Congested
-  links *defer* whole bucket rows — ``sent_mask`` tells the caller which
-  rows must be re-offered next window through the overflow-residue
-  machinery.
+* ``torus2d`` / ``torus3d`` (``repro.transport.torus``) — torus-faithful:
+  shards are mapped onto a 2-D (x, y) or 3-D (x, y, z) device torus and
+  every window travels via dimension-ordered neighbor ``ppermute`` hops
+  (X rings, then Y, then Z — the Z rings are the wafer axis) with
+  store-and-forward buffers and hop-by-hop credit-based link flow
+  control.  A route that crosses a congested link — first hop or any
+  transit hop — *defers* the whole bucket row — ``sent_mask`` tells the
+  caller which rows must be re-offered next window through the
+  overflow-residue machinery.
 
-Both backends are pure functions of ``(state, payload, counts)`` so they
+All backends are pure functions of ``(state, payload, counts)`` so they
 can live inside a jitted ``lax.scan`` carry; ``LinkState`` is the carried
 per-link flow-control state (empty for ``alltoall``) and ``LinkStats`` the
 per-window observability record ridden alongside ``WindowStats``.
+
+Credit / notification-delay semantics (§2.1, shared with
+``repro.core.flow_control`` — the authoritative statement of the
+discipline): each directed egress link of each torus node holds
+``link_credits`` credits; admitting a bucket row spends the row's event
+count on EVERY link of its dimension-ordered route, and a spent credit
+re-arms only ``notify_latency`` windows later, when the consumer-side
+notification lands.  Credits never exceed their initial limit and
+``credits + pending`` is conserved by every window, so back-pressure —
+not data loss — is the only possible response to sustained overload.
 """
 from __future__ import annotations
 
@@ -41,15 +53,22 @@ LinkState = CreditBank
 
 
 class LinkStats(NamedTuple):
-    """Per-window link-level observability (all () i32, per shard).
+    """Per-window link-level observability (per shard; scalars are () i32).
 
     The conservation identity, per shard and window::
 
         offered_events == sent_events + deferred_events
+        deferred_events == stalled_by_hop.sum()
 
     and globally (summed over the axis) ``sum(sent) == sum(delivered)`` —
     every admitted event arrives somewhere the same window; deferred events
-    are re-offered by the caller, never silently buffered.
+    are re-offered by the caller, never silently buffered.  The two array
+    fields are the hop-by-hop breakdowns: which hop of a stalled row's
+    route refused it (hop 0 = the source's own egress link; hop h > 0 = a
+    transit link h neighbor-steps downstream) and the peak
+    store-and-forward occupancy of each dimension-ordered ring phase.
+    Their lengths are backend-static (``max_hops`` / ``ndim`` for the
+    torus backends, 0 for ``alltoall``).
     """
 
     offered_events: jax.Array    # events presented to the transport
@@ -60,11 +79,17 @@ class LinkStats(NamedTuple):
     hops: jax.Array              # neighbor hops executed this window
     forwarded_bytes: jax.Array   # wire bytes shipped over links (all hops)
     max_in_flight: jax.Array     # peak store-and-forward buffer occupancy
+    stalled_by_hop: jax.Array    # (max_hops,) deferred events by the route
+                                 #   hop that refused them
+    max_in_flight_by_phase: jax.Array  # (ndim,) peak occupancy per ring
+                                 #   phase (X, Y, Z)
 
 
-def zero_link_stats() -> LinkStats:
+def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:
     z = jnp.zeros((), jnp.int32)
-    return LinkStats(z, z, z, z, z, z, z, z)
+    return LinkStats(z, z, z, z, z, z, z, z,
+                     jnp.zeros((max_hops,), jnp.int32),
+                     jnp.zeros((ndim,), jnp.int32))
 
 
 def pack_payload(payload: jax.Array, counts: jax.Array) -> jax.Array:

@@ -1,16 +1,16 @@
-"""Torus-faithful transport: dimension-ordered neighbor hops with credit
-flow control (paper §1 + §2.1, applied to the jitted hot path).
+"""Torus-faithful transport: dimension-ordered neighbor hops with
+hop-by-hop credit flow control (paper §1 + §2.1, on the jitted hot path).
 
-The Extoll fabric is a torus with dimension-ordered routing — a packet
-first walks its X ring to the destination column, then the Y ring to the
-destination row, taking the shortest signed direction on each ring (the
-same walk ``repro.core.torus.Torus.route`` enumerates on the host).  This
-backend reproduces that on a device mesh: the ``n_shards`` shards of the
-1-D shard_map axis are laid onto a 2-D (nx, ny) logical torus
-(``shard s -> (x = s % nx, y = s // nx)``, matching ``Torus.coords``) and
-each flush window travels exclusively via ``jax.lax.ppermute`` *neighbor*
-hops — the lowered HLO contains only collective-permutes, never an
-all-to-all.
+The Extoll fabric is a 3-D torus with dimension-ordered routing — a packet
+walks its X ring to the destination column, then the Y ring, then the
+Z ring (the wafer axis), taking the shortest signed direction on each ring
+(the same walk ``repro.core.torus.Torus.route`` enumerates on the host).
+This module reproduces that on a device mesh: the ``n_shards`` shards of
+the 1-D shard_map axis are laid onto an (n0, .., n_{d-1}) logical torus
+(``shard s -> (c0 = s % n0, c1 = (s // n0) % n1, ...)``, matching
+``Torus.coords`` with (x, y, z) = (c0, c1, c2)) and each flush window
+travels exclusively via ``jax.lax.ppermute`` *neighbor* hops — the lowered
+HLO contains only collective-permutes, never an all-to-all or all-gather.
 
 Per ring phase the algorithm is a bidirectional store-and-forward rotate:
 every node seeds two in-transit buffers (one per ring direction) indexed by
@@ -23,15 +23,30 @@ the quantities ``core.torus.link_loads`` models on the host become
 measurable (``LinkStats``) in the jitted path.
 
 Flow control is the credit discipline of ``repro.core.flow_control``,
-vectorized over the node's four egress links (+x, -x, +y, -y) as a
-``CreditBank``: admitting a bucket row spends its event count on the
-first-hop link of its dimension-ordered route, and spent credits only
-return ``notify_latency`` windows later (the notification delay line).
-Rows that do not get credits are *deferred* — reported through
-``sent_mask`` so the caller re-offers them via the overflow-residue
-machinery instead of buffering unbounded data in the fabric.  Downstream
-links are modelled as provisioned store-and-forward buffers whose
-occupancy is reported as ``max_in_flight``.
+**hop by hop**: the carried :class:`~repro.core.flow_control.CreditBank`
+holds per-link state for every egress link of every node (a vectorized
+``n_shards * 2 * ndim`` bank — links ordered (x+, x-, y+, y-, z+, z-) per
+node, the same direction columns as ``core.torus.link_loads``).  Admitting
+a bucket row spends its event count on EVERY link of its dimension-ordered
+route — first hop and all transit hops — and spent credits only return
+``notify_latency`` windows later (the notification delay line).  A row
+whose route crosses a link without enough credits — even a mid-route link
+on some other node — is *stalled upstream*: it stays in the sender's
+store-and-forward buffer and is reported through ``sent_mask`` so the
+caller re-offers it via the overflow-residue machinery instead of
+buffering unbounded data in the fabric.  ``LinkStats.stalled_by_hop``
+records WHICH hop of the route refused each stalled row, and
+``max_in_flight_by_phase`` the peak store-and-forward occupancy per ring
+phase, so mid-route congestion is observable rather than averaged away.
+
+Admission is computed identically on every shard (each shard carries the
+same global bank): the per-shard offered counts are first replicated with
+a dimension-wise ring all-gather built from the SAME neighbor ``ppermute``
+rotations (nx-1 + ny-1 + nz-1 extra hops of a tiny (n, n) i32 matrix —
+the Extoll notification traffic riding the data links), then every node
+deterministically replays the same canonical-order admission, so the
+distributed credit state never diverges.  When ``link_credits == 0`` the
+fabric is unthrottled and the all-gather is compiled out entirely.
 """
 from __future__ import annotations
 
@@ -39,16 +54,13 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core import aggregator
 from repro.core import flow_control as fc
+from repro.core.torus import Torus
 from repro.transport import base
-
-# egress link indices
-XP, XM, YP, YM = 0, 1, 2, 3
-N_LINKS = 4
-
 
 def default_shape(n_shards: int) -> tuple[int, int]:
     """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
@@ -59,37 +71,61 @@ def default_shape(n_shards: int) -> tuple[int, int]:
     return nx, n_shards // nx
 
 
-def _ring_perm(nx: int, ny: int, axis: str, step: int):
-    """(src, dst) pairs moving every shard one step along its X or Y ring."""
-    pairs = []
-    for s in range(nx * ny):
-        x, y = s % nx, s // nx
-        if axis == "x":
-            d = ((x + step) % nx) + y * nx
-        else:
-            d = x + ((y + step) % ny) * nx
-        pairs.append((s, d))
-    return pairs
+def default_shape3d(n_shards: int) -> tuple[int, int, int]:
+    """Most-cubic (nx, ny, nz) factorization with nx <= ny <= nz
+    (8 -> (2, 2, 2), 16 -> (2, 2, 4)).  Wafer-stacked setups that want the
+    paper's (2, 4, n_wafers) arrangement pass nx/ny/nz explicitly."""
+    best = (1, 1, n_shards)
+    for nx in range(1, int(round(n_shards ** (1 / 3))) + 1):
+        if n_shards % nx:
+            continue
+        ny, nz = default_shape(n_shards // nx)
+        if ny >= nx:
+            best = (nx, ny, nz)
+    return best
 
 
-class Torus2DTransport(base.Transport):
-    """Dimension-ordered 2-D torus exchange with per-link credits.
+class TorusTransport(base.Transport):
+    """Dimension-ordered torus exchange with hop-by-hop per-link credits.
 
-    nx * ny must equal ``n_shards``.  ``link_credits=0`` disables
+    ``prod(dims)`` must equal ``n_shards``.  ``link_credits=0`` disables
     throttling (links are provisioned far beyond any window's traffic);
-    a positive value is the per-window event budget of each egress link,
-    replenished ``notify_latency`` windows after being spent.  Credits
-    never exceed their initial limit, so ``link_credits`` must stay at or
-    above the largest possible bucket row — a bigger row could never be
-    admitted and would head-of-line-block its link forever.  Callers that
-    know their row bound pass it as ``max_row_events`` (the bucket
-    capacity; ``make_exchange`` and the simulator do) and construction
-    fails fast on a livelock-able configuration.
+    a positive value is the per-window event budget of EACH directed
+    egress link in the fabric — injection *and* transit — replenished
+    ``notify_latency`` windows after being spent.  Credits never exceed
+    their initial limit, so ``link_credits`` must stay at or above the
+    largest possible bucket row — a bigger row could never be admitted
+    and would head-of-line-block its route forever.  Callers that know
+    their row bound pass it as ``max_row_events`` (the bucket capacity;
+    ``make_exchange`` and the simulator do) and construction fails fast
+    on a livelock-able configuration.
+
+    Admission discipline (canonical order, replayed identically on every
+    node): rows are considered source-major, destination-minor, with the
+    source order ROTATED by the bank's progress epoch (round-robin
+    arbitration: the top-priority source advances one step on every
+    window that spent credits, so two sources contending for the same
+    saturated link alternate over progress rounds instead of the
+    lower-index one winning forever — bounded starvation, worst-case
+    ``n_shards`` progress rounds to reach top priority).  The epoch
+    advances on progress rather than wall-clock windows so the rotation
+    cannot phase-lock with the ``notify_latency`` refund cycle.  A row is
+    admitted iff its source egress FIFO is not already blocked this window
+    AND every link on its dimension-ordered route has ``count`` credits
+    remaining.  A refused row blocks every later row on the same source
+    egress link (a hardware link FIFO cannot reorder its queue), even if a
+    smaller row would still fit — the same head-of-line semantics the
+    first-hop-only model had, extended along the whole route.
+
+    Memory note: the static route-incidence tensor is (n², K) with
+    ``K = n_shards * 2 * ndim`` — cubic in shard count, trivial for real
+    device counts (n=64 -> 1.5 M i8 entries) but not meant for
+    thousand-node host-side studies (that is ``core.torus.link_loads``).
     """
 
-    name = "torus2d"
+    name = "torus"
 
-    def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
+    def __init__(self, n_shards: int, dims: tuple[int, ...], *,
                  link_credits: int = 0, notify_latency: int = 2,
                  max_row_events: int = 0):
         super().__init__(n_shards)
@@ -98,62 +134,145 @@ class Torus2DTransport(base.Transport):
                 f"link_credits ({link_credits}) must be >= the largest "
                 f"bucket row ({max_row_events} events): credits never "
                 f"exceed their initial limit, so an oversized row would "
-                f"head-of-line-block its egress link forever")
-        if not nx and not ny:
-            nx, ny = default_shape(n_shards)
-        elif not ny:
-            ny = n_shards // nx
-        elif not nx:
-            nx = n_shards // ny
-        if nx * ny != n_shards:
-            raise ValueError(f"mesh ({nx}, {ny}) != n_shards {n_shards}")
-        self.nx, self.ny = nx, ny
+                f"head-of-line-block its route forever")
+        dims = tuple(int(d) for d in dims)
+        if math.prod(dims) != n_shards:
+            raise ValueError(f"mesh {dims} != n_shards {n_shards}")
+        if not 1 <= len(dims) <= 3:
+            raise ValueError(f"1..3 torus dimensions supported, got {dims}")
+        self.dims = dims
+        self.ndim = len(dims)
+        self.n_links = 2 * self.ndim                  # per node
         self.link_credits = int(link_credits)
         self.notify_latency = int(notify_latency)
-        self._perm = {
-            "xp": _ring_perm(nx, ny, "x", +1),
-            "xm": _ring_perm(nx, ny, "x", -1),
-            "yp": _ring_perm(nx, ny, "y", +1),
-            "ym": _ring_perm(nx, ny, "y", -1),
-        }
+        # single source of truth for shard <-> coordinate mapping: the
+        # host-side model (unused axes padded to 1) — the ppermute rings,
+        # the credit routes and core.torus analysis can never disagree
+        pad = dims + (1,) * (3 - self.ndim)
+        self._host = Torus(nx=pad[0], ny=pad[1], nz=pad[2])
+        self._perm = [
+            (self._ring_perm(a, +1), self._ring_perm(a, -1))
+            for a in range(self.ndim)
+        ]
+        self._build_routes()
 
-    # -- flow-control state ----------------------------------------------
-    def init_state(self) -> base.LinkState:
-        limit = self.link_credits if self.link_credits > 0 else 1 << 30
-        return fc.init_credits(N_LINKS, limit, self.notify_latency)
+    # -- static topology ---------------------------------------------------
+    def _ring_perm(self, a: int, step: int):
+        """(src, dst) pairs moving every shard one step along ring ``a``."""
+        ids = np.arange(self.n_shards)
+        c = list(self._host.coords(ids))
+        c[a] = (c[a] + step) % self.dims[a]
+        dst = self._host.node_id(*c)
+        return list(zip(ids.tolist(), dst.astype(int).tolist()))
 
-    def _first_hop_link(self, my_x, my_y):
-        """Egress link of each destination row's dimension-ordered route
-        (-1 for the local row)."""
-        d = jnp.arange(self.n_shards)
-        fx = (d % self.nx - my_x) % self.nx
-        fy = (d // self.nx - my_y) % self.ny
-        lx = jnp.where(fx == 0, -1, jnp.where(fx <= self.nx // 2, XP, XM))
-        ly = jnp.where(fy == 0, -1, jnp.where(fy <= self.ny // 2, YP, YM))
-        return jnp.where(lx >= 0, lx, ly)
+    def _build_routes(self):
+        """Host-side precompute of the per-pair dimension-ordered routes.
 
-    def _admit(self, state, counts, link):
-        """In-order (FIFO) whole-bucket admission per egress link.
-
-        Rows are admitted in destination order while the link's running
-        total stays within its credits; a row that does not fit blocks
-        every later row on the same link (head-of-line blocking — a
-        hardware link FIFO cannot reorder its queue), even if a smaller
-        row would still fit the remaining credits.
+        ``_incidence[s*n+d]`` is the 0/1 egress-link indicator (K,) of the
+        route s -> d (K = n_shards * n_links, link id = node * n_links +
+        direction); ``_link_seq`` the same links in hop order (-1 pad) so
+        stalls can be attributed to the blocking hop; ``_first_link`` hop
+        0 (-1 for local rows).  Derived from ``core.torus.Torus.route`` so
+        the data path, the credit path and the host model can never
+        disagree on a route.
         """
-        admitted = jnp.ones_like(link, dtype=bool)
-        spent = []
-        for l in range(N_LINKS):
-            on = link == l
-            csum = jnp.cumsum(jnp.where(on, counts, 0))
-            ok = csum <= state.credits[l]
-            admitted = jnp.where(on, ok, admitted)
-            spent.append(jnp.sum(jnp.where(on & ok, counts, 0)))
-        return admitted, jnp.stack(spent).astype(jnp.int32)
+        n, nl = self.n_shards, self.n_links
+        host = self._host
+        self.max_hops = max(sum(d // 2 for d in self.dims), 1)
+        inc = np.zeros((n * n, n * nl), np.int8)
+        seq = np.full((n * n, self.max_hops), -1, np.int32)
+        first = np.full((n * n,), -1, np.int32)
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                links = host.route_links(s, d)
+                for h, (u, dir_) in enumerate(links):
+                    lid = u * nl + dir_
+                    inc[s * n + d, lid] = 1
+                    seq[s * n + d, h] = lid
+                first[s * n + d] = seq[s * n + d, 0]
+        self._incidence = jnp.asarray(inc)
+        self._link_seq = jnp.asarray(seq)
+        self._first_link = jnp.asarray(first)
 
-    # -- one bidirectional ring phase -------------------------------------
+    # -- flow-control state ------------------------------------------------
+    def init_state(self) -> base.LinkState:
+        """Global bank: one entry per directed egress link of EVERY node.
+
+        Replicated on each shard; stays consistent because admission is a
+        deterministic function of the all-gathered counts (see module
+        docstring)."""
+        limit = self.link_credits if self.link_credits > 0 else 1 << 30
+        return fc.init_credits(self.n_shards * self.n_links, limit,
+                               self.notify_latency)
+
+    # -- replicating the offered counts (neighbor permutes only) -----------
+    def _allgather_counts(self, counts: jax.Array, me, axis_name: str):
+        """(n,) per-shard offered counts -> (n, n) global matrix via a
+        dimension-wise ring all-gather: pass-and-accumulate a token one
+        neighbor over, ``size-1`` hops per ring phase — the notification
+        side-channel of §2.1 riding the same links as the data."""
+        n = self.n_shards
+        acc = jnp.zeros((n, n), jnp.int32).at[me].set(counts)
+        for a in range(self.ndim):
+            token = acc
+            perm_p, _ = self._perm[a]
+            for _ in range(self.dims[a] - 1):
+                token = lax.ppermute(token, axis_name, perm_p)
+                acc = acc + token
+        return acc
+
+    # -- canonical hop-by-hop admission ------------------------------------
+    def _admit_global(self, state: base.LinkState, counts_all: jax.Array):
+        """Replay the canonical admission over the global counts matrix.
+
+        Returns (admitted (n, n) bool, spent (K,) i32, stall_hop (n, n)
+        i32 — index of the route hop that refused each stalled row, -1
+        for admitted rows).  Pure function of (credits, epoch,
+        counts_all): every shard computes the identical result, keeping
+        the replicated bank consistent without any extra synchronization.
+        The source-major order is rotated by ``state.epoch`` — round-robin
+        arbitration over progress rounds (see class docstring).
+        """
+        n, K, H = self.n_shards, self.n_shards * self.n_links, self.max_hops
+        flat = counts_all.reshape(-1)
+        r_all = jnp.arange(n * n)
+        rows = ((r_all // n + state.epoch) % n) * n + r_all % n
+
+        def row(carry, r):
+            remaining, blocked = carry
+            c = flat[r]
+            need = self._incidence[r].astype(jnp.int32) * c
+            fl = self._first_link[r]
+            routed = (fl >= 0) & (c > 0)
+            feasible = jnp.all(remaining >= need)
+            hol = blocked[jnp.maximum(fl, 0)]
+            admit = ~routed | (feasible & ~hol)
+            spend = jnp.where(admit & routed, need, 0)
+            # blocking hop: first route link short of credits (0 if only
+            # the source FIFO head-of-line blocks an otherwise-fitting row)
+            seq = self._link_seq[r]
+            valid = seq >= 0
+            short = valid & (remaining[jnp.maximum(seq, 0)] < c)
+            h_short = jnp.min(jnp.where(short, jnp.arange(H), H))
+            stall = jnp.where(admit, -1,
+                              jnp.where(feasible, 0, h_short))
+            blocked = blocked.at[jnp.maximum(fl, 0)].set(
+                blocked[jnp.maximum(fl, 0)] | (routed & ~admit))
+            return (remaining - spend, blocked), (admit, stall)
+
+        (remaining, _), (admit, stall) = lax.scan(
+            row, (state.credits, jnp.zeros((K,), bool)), rows)
+        spent = state.credits - remaining
+        # un-rotate: scan outputs are in processing order, rows[i] -> i
+        admit = jnp.zeros((n * n,), bool).at[rows].set(admit)
+        stall = jnp.full((n * n,), -1, jnp.int32).at[rows].set(stall)
+        return admit.reshape(n, n), spent, stall.reshape(n, n)
+
+    # -- one bidirectional ring phase --------------------------------------
     def _ring_phase(self, bundles, axis_name, my_c, n, perm_p, perm_m,
-                    acc: dict):
+                    acc: dict, phase: int):
         """Rotate (n, B, W1) count-packed bundles (indexed by target ring
         coordinate) to their owners; returns them indexed by *source* ring
         coordinate.  ``acc`` accumulates LinkStats terms across phases."""
@@ -184,51 +303,83 @@ class Torus2DTransport(base.Transport):
                 recv = recv.at[src].set(jnp.take(v, my_c, axis=0))
                 v = v.at[my_c].set(jnp.uint32(0))
                 acc["hops"] += 1
-                acc["in_flight"] = jnp.maximum(acc["in_flight"],
-                                               live_events(v))
+                occ = live_events(v)
+                acc["in_flight"] = jnp.maximum(acc["in_flight"], occ)
+                acc["in_flight_phase"][phase] = jnp.maximum(
+                    acc["in_flight_phase"][phase], occ)
         # everything within shortest distance has been absorbed
         return recv
+
+    # -- phase reshapes ----------------------------------------------------
+    # The (n, W1) buffer keeps a fixed layout: flattened index
+    # c0 + n0*c1 + n0*n1*c2 where axis-a's coordinate is the DESTINATION
+    # coordinate before phase a has run and the SOURCE coordinate after.
+    def _phase_perm(self, a: int):
+        nd = self.ndim
+        lead = nd - 1 - a            # axis of dim ``a`` in the reshaped view
+        perm = (lead, *(i for i in range(nd) if i != lead), nd)
+        return perm, tuple(int(i) for i in np.argsort(perm))
+
+    def _to_phase(self, buf: jax.Array, a: int) -> jax.Array:
+        w1 = buf.shape[-1]
+        t = buf.reshape(*reversed(self.dims), w1)
+        perm, _ = self._phase_perm(a)
+        return t.transpose(perm).reshape(self.dims[a], -1, w1)
+
+    def _from_phase(self, recv: jax.Array, a: int) -> jax.Array:
+        w1 = recv.shape[-1]
+        perm, inv = self._phase_perm(a)
+        other = [d for i, d in enumerate(reversed(self.dims))
+                 if i != self.ndim - 1 - a]
+        t = recv.reshape(self.dims[a], *other, w1).transpose(inv)
+        return t.reshape(self.n_shards, w1)
 
     # -- the full window ---------------------------------------------------
     def exchange(self, state: base.LinkState, payload: jax.Array,
                  counts: jax.Array, *, axis_name: str,
                  enforce_credits: bool = True) -> base.TransportOut:
-        nx, ny, n = self.nx, self.ny, self.n_shards
-        w = payload.shape[1]
+        n = self.n_shards
         me = lax.axis_index(axis_name)
-        my_x, my_y = me % nx, me // nx
         counts = counts.astype(jnp.int32)
 
-        # 1. injection: credit admission on the first-hop egress link
-        link = self._first_hop_link(my_x, my_y)
-        if enforce_credits:
-            admitted, spent = self._admit(state, counts, link)
+        # 1. injection: hop-by-hop credit admission over the whole route
+        #    (compiled out when unthrottled — no all-gather, no scan)
+        throttled = enforce_credits and self.link_credits > 0
+        if throttled:
+            counts_all = self._allgather_counts(counts, me, axis_name)
+            admit_all, spent, stall_all = self._admit_global(
+                state, counts_all)
+            admitted = admit_all[me]
+            stall_hop = stall_all[me]
         else:
             admitted = jnp.ones((n,), bool)
-            spent = jnp.zeros((N_LINKS,), jnp.int32)
+            spent = jnp.zeros((n * self.n_links,), jnp.int32)
+            stall_hop = jnp.full((n,), -1, jnp.int32)
         state = fc.credit_tick(state, spent)
         cnt_in = jnp.where(admitted, counts, 0)
         packed = base.pack_payload(
             jnp.where(admitted[:, None], payload, jnp.uint32(0)), cnt_in)
 
         acc = {"bytes": jnp.int32(0), "hops": 0,
-               "in_flight": jnp.int32(0)}
+               "in_flight": jnp.int32(0),
+               "in_flight_phase": [jnp.int32(0)] * self.ndim}
 
-        # 2. X rings: bundle rows by destination column, rotate along x
-        bx = packed.reshape(ny, nx, w + 1).transpose(1, 0, 2)   # [dx, dy]
-        xrecv = self._ring_phase(bx, axis_name, my_x, nx,
-                                 self._perm["xp"], self._perm["xm"], acc)
-        # xrecv[sx, dy]: from source (sx, my_y), for destination (my_x, dy)
+        # 2. dimension-ordered phases: rotate along each axis' rings
+        my_c = self._coords_of(me)
+        buf = packed
+        for a in range(self.ndim):
+            bundles = self._to_phase(buf, a)
+            perm_p, perm_m = self._perm[a]
+            recv = self._ring_phase(bundles, axis_name, my_c[a],
+                                    self.dims[a], perm_p, perm_m, acc,
+                                    phase=a)
+            buf = self._from_phase(recv, a)
+        recv_payload, recv_counts = base.unpack_payload(buf)
 
-        # 3. Y rings: regroup by destination row, rotate along y
-        by = xrecv.transpose(1, 0, 2)                           # [dy, sx]
-        yrecv = self._ring_phase(by, axis_name, my_y, ny,
-                                 self._perm["yp"], self._perm["ym"], acc)
-        # yrecv[sy, sx]: from source (sx, sy), for me
-
-        recv_payload, recv_counts = base.unpack_payload(
-            yrecv.reshape(n, w + 1))
-
+        # 3. stats: stalled rows histogrammed by their blocking hop
+        stalled_by_hop = jnp.zeros((self.max_hops,), jnp.int32).at[
+            jnp.clip(stall_hop, 0, self.max_hops - 1)
+        ].add(jnp.where(stall_hop >= 0, counts, 0))
         offered = jnp.sum(counts).astype(jnp.int32)
         sent = jnp.sum(cnt_in).astype(jnp.int32)
         stats = base.LinkStats(
@@ -240,6 +391,8 @@ class Torus2DTransport(base.Transport):
             hops=jnp.int32(acc["hops"]),
             forwarded_bytes=acc["bytes"].astype(jnp.int32),
             max_in_flight=acc["in_flight"].astype(jnp.int32),
+            stalled_by_hop=stalled_by_hop,
+            max_in_flight_by_phase=jnp.stack(acc["in_flight_phase"]),
         )
         return base.TransportOut(
             state=state,
@@ -248,3 +401,62 @@ class Torus2DTransport(base.Transport):
             sent_mask=admitted,
             stats=stats,
         )
+
+    def _coords_of(self, me):
+        """Traced shard index -> per-dimension ring coordinates."""
+        out = []
+        for d in self.dims:
+            out.append(me % d)
+            me = me // d
+        return out
+
+
+class Torus2DTransport(TorusTransport):
+    """(nx, ny) torus — the per-wafer concentrator face (2x4 for 8)."""
+
+    name = "torus2d"
+
+    def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
+                 link_credits: int = 0, notify_latency: int = 2,
+                 max_row_events: int = 0):
+        if not nx and not ny:
+            nx, ny = default_shape(n_shards)
+        elif not ny:
+            ny = n_shards // max(nx, 1)
+        elif not nx:
+            nx = n_shards // max(ny, 1)
+        super().__init__(n_shards, (nx, ny), link_credits=link_credits,
+                         notify_latency=notify_latency,
+                         max_row_events=max_row_events)
+        self.nx, self.ny = nx, ny
+
+
+class Torus3DTransport(TorusTransport):
+    """(nx, ny, nz) torus — wafer faces stacked along the Z (wafer) axis,
+    the paper's full Extoll arrangement (``core.torus.wafer_topology``)."""
+
+    name = "torus3d"
+
+    def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
+                 nz: int = 0, link_credits: int = 0, notify_latency: int = 2,
+                 max_row_events: int = 0):
+        known = [d for d in (nx, ny, nz) if d]
+        if not known:
+            nx, ny, nz = default_shape3d(n_shards)
+        elif len(known) == 1:
+            # one axis pinned (typically nz = wafer count): most-square
+            # factorization of the rest onto the remaining face
+            rest = n_shards // known[0]
+            if nz:
+                nx, ny = default_shape(rest)
+            elif ny:
+                nx, nz = default_shape(rest)
+            else:
+                ny, nz = default_shape(rest)
+        elif len(known) == 2:
+            missing = n_shards // max(math.prod(known), 1)
+            nx, ny, nz = (nx or missing, ny or missing, nz or missing)
+        super().__init__(n_shards, (nx, ny, nz), link_credits=link_credits,
+                         notify_latency=notify_latency,
+                         max_row_events=max_row_events)
+        self.nx, self.ny, self.nz = nx, ny, nz

@@ -261,6 +261,51 @@ def test_ring_throughput_credit_limit():
     assert 0.35 <= ratio <= 0.65, ratio     # ~ 4/8 with batching effects
 
 
+def test_credit_bank_zero_initial_credits():
+    """A bank that starts empty can never be spent from — the caller must
+    defer everything (spent=0) and the bank stays empty forever: nothing
+    is lost, nothing is created."""
+    bank = fc.init_credits(4, 0, 2)
+    for _ in range(5):
+        bank = fc.credit_tick(bank, jnp.zeros((4,), jnp.int32))
+        assert (np.asarray(bank.credits) == 0).all()
+        assert (np.asarray(bank.pending) == 0).all()
+
+
+def test_credit_bank_zero_notify_latency():
+    """notify_latency=0 -> the refund is immediate: credit_tick with any
+    legal spend leaves the bank unchanged (credits cap one window's
+    traffic but nothing carries across windows)."""
+    bank = fc.init_credits(3, 10, 0)
+    assert bank.pending.shape == (3, 0)
+    out = fc.credit_tick(bank, jnp.asarray([10, 3, 0], jnp.int32))
+    assert (np.asarray(out.credits) == 10).all()
+    # contrast: latency 1 delays the refund exactly one tick
+    b1 = fc.init_credits(3, 10, 1)
+    spent = jnp.asarray([10, 3, 0], jnp.int32)
+    b1 = fc.credit_tick(b1, spent)
+    assert list(np.asarray(b1.credits)) == [0, 7, 10]
+    b1 = fc.credit_tick(b1, jnp.zeros((3,), jnp.int32))
+    assert (np.asarray(b1.credits) == 10).all()
+
+
+@given(lat=draw.ints(1, 6), seed=draw.ints(0, 1 << 16))
+def test_credit_bank_conservation_invariant(lat, seed):
+    """credits + pending.sum() is invariant under credit_tick for any
+    legal spend sequence (spent <= credits), and credits never go
+    negative — the identity the hop-by-hop transport banks rely on."""
+    rng = np.random.default_rng(seed)
+    limit = int(rng.integers(1, 50))
+    bank = fc.init_credits(5, limit, lat)
+    for _ in range(4 * lat):
+        avail = np.asarray(bank.credits)
+        spent = rng.integers(0, avail + 1).astype(np.int32)
+        bank = fc.credit_tick(bank, jnp.asarray(spent))
+        total = np.asarray(bank.credits) + np.asarray(bank.pending).sum(-1)
+        assert (total == limit).all()
+        assert (np.asarray(bank.credits) >= 0).all()
+
+
 # ---------------------------------------------------------------------------
 # torus
 # ---------------------------------------------------------------------------
@@ -305,10 +350,17 @@ def test_link_loads_conserve_traffic():
 def test_link_loads_vectorized_matches_scalar_oracle():
     """The batched numpy link_loads must reproduce the per-pair routed
     oracle exactly — same links, same bytes — across ring shapes that
-    exercise wraps, ties (even rings) and degenerate axes."""
+    exercise wraps, ties (even rings) and degenerate axes, in 2-D AND
+    3-D: the Z-axis walk is the path the torus3d transport's credit
+    accounting relies on, so Z-dominant shapes (long wafer stacks, odd
+    and even Z rings for both tie-break branches) are covered
+    explicitly."""
     rng = np.random.default_rng(7)
+    z_exercised = 0
     for shape in [(2, 2, 2), (2, 4, 3), (1, 5, 1), (2, 4, 1), (3, 3, 3),
-                  (4, 4, 2)]:
+                  (4, 4, 2),
+                  # Z-dominant: the wafer-stacking axis is the longest ring
+                  (2, 2, 5), (1, 2, 6), (2, 4, 4), (1, 1, 7)]:
         t = torus.Torus(*shape)
         n = t.n_nodes
         m = rng.random((n, n)) * (rng.random((n, n)) < 0.4)
@@ -321,6 +373,34 @@ def test_link_loads_vectorized_matches_scalar_oracle():
         # every link is a single ring hop
         for (u, v) in got:
             assert int(t.hops(u, v)) == 1, (shape, u, v)
+        # the Z axis really carried traffic (directions 4/5), both ways
+        if shape[2] > 1:
+            zdirs = {t.link_dir(u, v) for (u, v) in got
+                     if t.link_dir(u, v) >= 4}
+            z_exercised += len(zdirs)
+    assert z_exercised >= 8, "Z-axis links barely exercised"
+
+
+def test_route_links_matches_route():
+    """route_links enumerates exactly the (node, direction) egress links
+    of the dimension-ordered route — the credit-spending unit of the
+    hop-by-hop torus transports."""
+    t = torus.Torus(2, 4, 3)
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        s, d = (int(v) for v in rng.integers(0, t.n_nodes, 2))
+        links = t.route_links(s, d)
+        path = t.route(s, d)
+        assert len(links) == len(path) - 1 == int(t.hops(s, d))
+        for (u, dir_), exp_u, exp_v in zip(links, path[:-1], path[1:]):
+            assert u == exp_u
+            # stepping u one hop along dir_ lands on the next path node
+            x, y, z = (int(c) for c in t.coords(u))
+            step = [(1, 0, 0), (-1, 0, 0), (0, 1, 0), (0, -1, 0),
+                    (0, 0, 1), (0, 0, -1)][dir_]
+            nxt = t.node_id((x + step[0]) % t.nx, (y + step[1]) % t.ny,
+                            (z + step[2]) % t.nz)
+            assert int(nxt) == exp_v
 
 
 def test_link_loads_multiwafer_scale():

@@ -1,17 +1,24 @@
 """Transport subsystem tests (subprocess with forced host devices):
 
-* torus2d delivers bit-identical buckets to the alltoall backend on a
-  (2, 4) torus of 8 shards, and its lowered HLO contains ONLY neighbor
-  collective-permutes (no all-to-all) — the acceptance bar of the torus
-  transport PR.
-* Credit-based link flow control conserves events for random traffic and
-  tiny random credit budgets across many seeds:
-  offered == sent + deferred per shard/window, and globally
-  sum(sent) == sum(delivered) — the LinkStats extension of the
-  WindowStats identity in tests/test_pipeline.py.
-* The sharded simulator over torus2d reproduces the alltoall spike train
-  exactly when uncongested, and under congestion the transport-deferral /
-  residue re-offer chain balances window by window.
+* torus2d AND torus3d deliver bit-identical buckets to the alltoall
+  backend (on a (2, 4) and a (2, 2, 2) torus of 8 shards), and their
+  lowered HLO contains ONLY neighbor collective-permutes (no all-to-all,
+  no all-gather) — the acceptance bar of the torus transport PRs.  With
+  credits enabled the count grows by exactly the dimension-wise ring
+  all-gather hops and stays permute-only.
+* Hop-by-hop credit flow control conserves events for random traffic and
+  tiny random credit budgets across many seeds: offered == sent +
+  deferred per shard/window, deferred == stalled_by_hop.sum() (every
+  stall attributed to the route hop that refused it), and globally
+  sum(sent) == sum(delivered).  The replicated global CreditBank stays
+  bit-identical across shards and satisfies credits + pending == limit
+  on every link after every window (credit-unit conservation), including
+  across a multi-window run ended by a drain.
+* CreditBank edge case at transport level: a zero-credit bank defers
+  every off-node row (nothing lost — local rows still deliver).
+* The sharded simulator over torus2d/torus3d reproduces the alltoall
+  spike train exactly when uncongested, and under congestion the
+  transport-deferral / residue re-offer chain balances window by window.
 """
 import pytest
 
@@ -39,43 +46,58 @@ stacked = rt.RoutingTables(
 addr = jax.random.randint(jax.random.PRNGKey(0), (n_shards, N), 0, n_addr)
 ts = jax.random.randint(jax.random.PRNGKey(1), (n_shards, N), 0, 1000)
 words = ev.pack(addr, ts)
-runs = {}
-for backend, opts in [("alltoall", None), ("torus2d", {"nx": 2, "ny": 4})]:
+
+def hlo_counts(run):
+    txt = jax.jit(run).lower(words, stacked).as_text()
+    return (txt.count("all_to_all") + txt.count("all-to-all"),
+            txt.count("all_gather") + txt.count("all-gather"),
+            txt.count("collective_permute") + txt.count("collective-permute"))
+
+run_a = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
+                      n_addr_per_shard=n_addr, transport="alltoall")
+ref = run_a(words, stacked)
+assert hlo_counts(run_a)[0] == 1
+
+# data-phase permutes: sum over rings of (n//2 fwd + (n-1)//2 bwd);
+# credited runs add the (n-1)-hop-per-ring counts all-gather, still
+# permute-only (hop-by-hop admission needs the global offered matrix)
+for backend, opts, exp_cp in [
+    ("torus2d", {"nx": 2, "ny": 4}, 1 + 3),
+    ("torus3d", {"nx": 2, "ny": 2, "nz": 2}, 1 + 1 + 1),
+    ("torus2d", {"nx": 2, "ny": 4, "link_credits": 1 << 20}, 4 + 1 + 3),
+    ("torus3d", {"nx": 2, "ny": 2, "nz": 2, "link_credits": 1 << 20},
+     3 + 1 + 1 + 1),
+]:
     run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
                         n_addr_per_shard=n_addr, transport=backend,
                         transport_opts=opts)
-    runs[backend] = (run, run(words, stacked))
-a, t = runs["alltoall"][1], runs["torus2d"][1]
-# bit-identical delivered event multisets (in fact identical buffers)
-assert (np.asarray(a.recv_events) == np.asarray(t.recv_events)).all()
-assert (np.asarray(a.recv_guids) == np.asarray(t.recv_guids)).all()
-assert (np.asarray(a.recv_counts) == np.asarray(t.recv_counts)).all()
-assert (np.asarray(a.link_events) == np.asarray(t.link_events)).all()
-assert np.asarray(t.sent_mask).all()
-# torus wire model: every hop pays -> forwarded bytes >= crossbar bytes
-assert int(np.asarray(t.link.forwarded_bytes).sum()) >= \\
-    int(np.asarray(a.link.forwarded_bytes).sum())
-# HLO: torus lowers to neighbor collective-permutes ONLY, no all-to-all
-txt = jax.jit(runs["torus2d"][0]).lower(words, stacked).as_text()
-n_a2a = txt.count("all_to_all") + txt.count("all-to-all")
-n_cp = txt.count("collective_permute") + txt.count("collective-permute")
-assert n_a2a == 0, f"torus2d must not lower an all-to-all ({n_a2a})"
-assert n_cp > 0, "torus2d must lower neighbor collective-permutes"
-# dimension-ordered shortest-path hop count for a (2, 4) torus:
-# x: 1 forward; y: 2 forward + 1 backward  ->  4 permutes
-assert n_cp == 4, n_cp
-txt_a = jax.jit(runs["alltoall"][0]).lower(words, stacked).as_text()
-assert txt_a.count("all_to_all") + txt_a.count("all-to-all") == 1
+    t = run(words, stacked)
+    # bit-identical delivered event multisets (in fact identical buffers)
+    assert (np.asarray(ref.recv_events) == np.asarray(t.recv_events)).all()
+    assert (np.asarray(ref.recv_guids) == np.asarray(t.recv_guids)).all()
+    assert (np.asarray(ref.recv_counts) == np.asarray(t.recv_counts)).all()
+    assert (np.asarray(ref.link_events) == np.asarray(t.link_events)).all()
+    assert np.asarray(t.sent_mask).all(), (backend, opts)
+    # torus wire model: every hop pays -> forwarded bytes >= crossbar bytes
+    assert int(np.asarray(t.link.forwarded_bytes).sum()) >= \\
+        int(np.asarray(ref.link.forwarded_bytes).sum())
+    n_a2a, n_ag, n_cp = hlo_counts(run)
+    assert n_a2a == 0, f"{backend} must not lower an all-to-all ({n_a2a})"
+    assert n_ag == 0, f"{backend} must not lower an all-gather ({n_ag})"
+    assert n_cp == exp_cp, (backend, opts, n_cp, exp_cp)
 print("TORUS_EQUIV_OK")
 """)
     assert "TORUS_EQUIV_OK" in out
 
 
-def test_torus_credit_conservation_property():
-    """offered == sent + deferred per shard+window and global
-    sum(sent) == sum(delivered), for random traffic against tiny random
-    per-link credit budgets, with the credit state threaded across
-    windows; credits never go negative."""
+def test_torus_hop_by_hop_credit_conservation_property():
+    """offered == sent + deferred per shard+window, stalled_by_hop sums
+    to deferred, global sum(sent) == sum(delivered), for random traffic
+    against tiny random per-link credit budgets, with the credit state
+    threaded across windows; the replicated bank stays identical on
+    every shard, never goes negative, and conserves credit units
+    (credits + pending == limit per link) through the run AND through an
+    end-of-run drain."""
     out = run_md("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
@@ -85,55 +107,134 @@ from repro.core import flow_control as fc
 
 D, W = 8, 6
 mesh = jax.make_mesh((D,), ("wafer",))
-t = transport.create("torus2d", n_shards=D, nx=2, ny=4, link_credits=1,
-                     notify_latency=2)
-
-def body(lstate, p, c):
-    lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
-    out = t.exchange(lstate, p[0], c[0], axis_name="wafer")
-    return jax.tree_util.tree_map(
-        lambda x: x[None], (out.state, out.recv_counts, out.sent_mask,
-                            out.stats))
-
 spec = P("wafer")
-fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
-                       out_specs=spec, check_rep=False))
+
+def make_fns(t):
+    def body(lstate, p, c, enforce):
+        lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+        out = t.exchange(lstate, p[0], c[0], axis_name="wafer",
+                         enforce_credits=enforce)
+        return jax.tree_util.tree_map(
+            lambda x: x[None], (out.state, out.recv_counts, out.sent_mask,
+                                out.stats))
+    import functools
+    mk = lambda enforce: jax.jit(shard_map(
+        functools.partial(body, enforce=enforce), mesh=mesh,
+        in_specs=(spec, spec, spec), out_specs=spec, check_rep=False))
+    return mk(True), mk(False)
 
 rng = np.random.default_rng(0)
-any_deferred = False
-for seed in range(12):
-    limit = int(rng.integers(5, 80))
-    credits = jnp.full((D, 4), limit, jnp.int32)
-    pending = jnp.zeros((D, 4, 2), jnp.int32)
-    lstate = fc.CreditBank(credits=credits, pending=pending)
-    for win in range(4):
+for name, opts in [("torus2d", dict(nx=2, ny=4)),
+                   ("torus3d", dict(nx=2, ny=2, nz=2))]:
+    any_deferred = any_midroute = False
+    for seed in range(8):
+        limit = int(rng.integers(30, 120))
+        t = transport.create(name, n_shards=D, link_credits=limit,
+                             notify_latency=2, **opts)
+        fn, fn_drain = make_fns(t)
+        lstate = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (D,) + x.shape), t.init_state())
+        held_counts = np.zeros((D, D), np.int64)
+        for win in range(4):
+            counts = jnp.asarray(rng.integers(0, 30, (D, D)), jnp.int32)
+            payload = jnp.asarray(
+                rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
+            lstate, rcnt, mask, st = fn(lstate, payload, counts)
+            off = np.asarray(st.offered_events)
+            sent = np.asarray(st.sent_events)
+            defr = np.asarray(st.deferred_events)
+            assert (off == sent + defr).all(), (name, seed, win)
+            assert sent.sum() == np.asarray(st.delivered_events).sum()
+            assert np.asarray(rcnt).sum() == sent.sum()
+            # every stalled event is attributed to a route hop
+            sbh = np.asarray(st.stalled_by_hop)
+            assert (sbh.sum(-1) == defr).all(), (name, seed, win)
+            any_midroute = any_midroute or sbh[:, 1:].sum() > 0
+            # deferred rows really were withheld: mask rows account
+            held = np.where(np.asarray(mask), 0, np.asarray(counts)).sum(1)
+            assert (held == defr).all()
+            cr = np.asarray(lstate.credits)
+            pend = np.asarray(lstate.pending)
+            assert (cr >= 0).all()
+            # replicated bank identical on every shard
+            assert (cr == cr[0]).all() and (pend == pend[0]).all()
+            # credit-unit conservation on every link
+            assert (cr[0] + pend[0].sum(-1) == limit).all()
+            any_deferred = any_deferred or defr.sum() > 0
+        # end-of-run drain: ships regardless of credits, spends none
         counts = jnp.asarray(rng.integers(0, 30, (D, D)), jnp.int32)
-        payload = jnp.asarray(
-            rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
-        lstate, rcnt, mask, st = fn(lstate, payload, counts)
-        off, sent = np.asarray(st.offered_events), np.asarray(st.sent_events)
-        defr = np.asarray(st.deferred_events)
-        assert (off == sent + defr).all(), (seed, win)
-        assert sent.sum() == np.asarray(st.delivered_events).sum()
-        assert np.asarray(rcnt).sum() == sent.sum()
-        # deferred rows really were withheld: mask rows account for defr
-        held = np.where(np.asarray(mask), 0, np.asarray(counts)).sum(1)
-        assert (held == defr).all()
-        assert (np.asarray(lstate.credits) >= 0).all()
-        any_deferred = any_deferred or defr.sum() > 0
-assert any_deferred, "tiny credits never stalled a link -- unexercised"
+        payload = jnp.asarray(rng.integers(0, 1 << 31, (D, D, W)),
+                              jnp.uint32)
+        lstate, rcnt, mask, st = fn_drain(lstate, payload, counts)
+        assert np.asarray(mask).all()
+        assert np.asarray(rcnt).sum() == np.asarray(counts).sum()
+        cr, pend = np.asarray(lstate.credits), np.asarray(lstate.pending)
+        assert (cr[0] + pend[0].sum(-1) == limit).all()
+    assert any_deferred, name + ": tiny credits never stalled a link"
+    assert any_midroute, name + ": no stall ever attributed past hop 0"
+
 # ample credits -> nothing deferred, everything delivered
-lstate = fc.CreditBank(credits=jnp.full((D, 4), 1 << 30, jnp.int32),
-                       pending=jnp.zeros((D, 4, 2), jnp.int32))
+t = transport.create("torus3d", n_shards=D, nx=2, ny=2, nz=2,
+                     link_credits=1 << 20, notify_latency=2)
+fn, _ = make_fns(t)
+lstate = jax.tree_util.tree_map(
+    lambda x: jnp.broadcast_to(x, (D,) + x.shape), t.init_state())
 counts = jnp.asarray(rng.integers(0, 30, (D, D)), jnp.int32)
 payload = jnp.asarray(rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
 _, rcnt, mask, st = fn(lstate, payload, counts)
 assert np.asarray(mask).all()
 assert np.asarray(st.deferred_events).sum() == 0
 assert np.asarray(rcnt).sum() == np.asarray(counts).sum()
+
+# zero-credit bank: every off-node row defers, local rows still deliver,
+# nothing lost (offered == deferred + local)
+t0 = transport.create("torus3d", n_shards=D, nx=2, ny=2, nz=2,
+                      link_credits=64, notify_latency=2)
+fn0, _ = make_fns(t0)
+empty = t0.init_state()._replace(
+    credits=jnp.zeros_like(t0.init_state().credits))
+lstate = jax.tree_util.tree_map(
+    lambda x: jnp.broadcast_to(x, (D,) + x.shape), empty)
+counts = jnp.asarray(rng.integers(1, 30, (D, D)), jnp.int32)
+payload = jnp.asarray(rng.integers(0, 1 << 31, (D, D, W)), jnp.uint32)
+lstate, rcnt, mask, st = fn0(lstate, payload, counts)
+local = np.diag(np.asarray(counts))
+defr = np.asarray(st.deferred_events)
+assert (np.asarray(st.offered_events) == defr + local).all()
+assert (np.asarray(rcnt).sum(1) == local).all()
+assert (np.asarray(lstate.credits) == 0).all()
 print("CONSERVATION_OK")
 """)
     assert "CONSERVATION_OK" in out
+
+
+def test_admission_round_robin_no_starvation():
+    """Two sources contending for the same saturated mid-route link must
+    BOTH make progress: the canonical admission order rotates with the
+    bank's progress epoch, so the lower-index shard cannot win every
+    refund cycle.  Host-level (``_admit_global`` is collective-free) so
+    the arbitration is pinned without a device mesh."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import flow_control as fc
+    from repro.transport.torus import Torus2DTransport
+
+    # (2, 4) torus; routes 0->5 and 1->5 share node (1,0).y+ / (1,1).y+,
+    # each with exactly one full row of credits -> one winner per refund
+    t = Torus2DTransport(8, nx=2, ny=4, link_credits=16, notify_latency=2,
+                         max_row_events=16)
+    state = t.init_state()
+    counts = np.zeros((8, 8), np.int32)
+    counts[0, 5] = counts[1, 5] = 16
+    counts = jnp.asarray(counts)
+    wins = np.zeros(8, np.int64)
+    for _ in range(7 * 8):          # >= n_shards progress rounds
+        admit, spent, _ = t._admit_global(state, counts)
+        wins += np.asarray(admit)[:, 5]
+        state = fc.credit_tick(state, spent)
+        # at most one of the two contenders fits per window
+        assert np.asarray(admit)[[0, 1], 5].sum() <= 1
+    assert wins[0] > 0 and wins[1] > 0, wins[:2]
 
 
 def test_simulator_torus_equivalence_and_backpressure():
@@ -145,44 +246,52 @@ w, is_inh = spec.weight_matrix()
 part = network.build_partition(w, is_inh, n_shards=4)
 mesh = jax.make_mesh((4,), ("wafer",))
 
-def run(transport, link_credits=0, capacity=512, n_windows=8):
+def run(transport, link_credits=0, capacity=512, n_windows=8, **kw):
     cfg = sim.SimConfig(n_shards=4, per_shard=part.per_shard,
                         max_fan=part.fanout.shape[1], window=8, ring_len=32,
                         e_max=256, capacity=capacity, transport=transport,
-                        link_credits=link_credits, notify_latency=2)
+                        link_credits=link_credits, notify_latency=2, **kw)
     init, runf = sim.build_sharded_sim(mesh, "wafer", cfg, part,
                                        spec.bg_rates())
     st, stats = runf(init(0), n_windows)
     return jax.tree_util.tree_map(np.asarray, stats)
 
-# 1. uncongested torus == alltoall, window for window
-sa, st = run("alltoall"), run("torus2d")
+# 1. uncongested torus2d AND torus3d == alltoall, window for window
+#    (torus3d on (1, 2, 2): the Z rings carry the second fold)
+sa = run("alltoall")
+st = run("torus2d")
+s3 = run("torus3d", torus_nx=1, torus_ny=2, torus_nz=2)
 assert sa.spikes.sum() > 0
-assert (sa.spikes == st.spikes).all()
-assert (sa.events_sent == st.events_sent).all()
-assert sa.deadline_miss.sum() == 0 and st.deadline_miss.sum() == 0
-assert st.link.credit_stalls.sum() == 0
-assert (st.link.hops > 0)[:, 1:].all()
+for s in (st, s3):
+    assert (sa.spikes == s.spikes).all()
+    assert (sa.events_sent == s.events_sent).all()
+    assert s.deadline_miss.sum() == 0
+    assert s.link.credit_stalls.sum() == 0
+    assert (s.link.hops > 0)[:, 1:].all()
+assert sa.deadline_miss.sum() == 0
 
 # 2. tiny credits: back-pressure engages; the deferral chain balances
 # (link_credits must stay >= capacity -- the admission invariant)
-sc = run("torus2d", link_credits=40, capacity=32, n_windows=12)
-link = sc.link
-assert link.credit_stalls.sum() > 0, "credit back-pressure unexercised"
-assert (link.offered_events ==
-        link.sent_events + link.deferred_events).all()
-assert (link.sent_events.sum(0) == link.delivered_events.sum(0)).all()
-# the exchange at iteration k ships window k-1's aggregated buckets
-assert (link.offered_events[:, 1:] == sc.events_sent[:, :-1]).all()
-assert (link.offered_events[:, 0] == 0).all()
-# transport-deferred events re-enter the same row's aggregation:
-# fresh_k = offered_k - residue_{k-1} - link_deferred_k >= 0
-defr_prev = np.concatenate(
-    [np.zeros((4, 1), sc.deferred.dtype), sc.deferred[:, :-1]], axis=1)
-fresh = sc.offered - defr_prev - link.deferred_events
-assert (fresh >= 0).all()
-# aggregation-level identity still balances on every row
-assert (sc.offered == sc.events_sent + sc.deferred + sc.overflow).all()
+for transport, kw in [("torus2d", {}),
+                      ("torus3d", dict(torus_nx=1, torus_ny=2, torus_nz=2))]:
+    sc = run(transport, link_credits=40, capacity=32, n_windows=12, **kw)
+    link = sc.link
+    assert link.credit_stalls.sum() > 0, transport + ": unexercised"
+    assert (link.offered_events ==
+            link.sent_events + link.deferred_events).all()
+    assert (link.sent_events.sum(0) == link.delivered_events.sum(0)).all()
+    assert (link.stalled_by_hop.sum(-1) == link.deferred_events).all()
+    # the exchange at iteration k ships window k-1's aggregated buckets
+    assert (link.offered_events[:, 1:] == sc.events_sent[:, :-1]).all()
+    assert (link.offered_events[:, 0] == 0).all()
+    # transport-deferred events re-enter the same row's aggregation:
+    # fresh_k = offered_k - residue_{k-1} - link_deferred_k >= 0
+    defr_prev = np.concatenate(
+        [np.zeros((4, 1), sc.deferred.dtype), sc.deferred[:, :-1]], axis=1)
+    fresh = sc.offered - defr_prev - link.deferred_events
+    assert (fresh >= 0).all()
+    # aggregation-level identity still balances on every row
+    assert (sc.offered == sc.events_sent + sc.deferred + sc.overflow).all()
 print("SIM_TORUS_OK")
 """, n_devices=4)
     assert "SIM_TORUS_OK" in out

