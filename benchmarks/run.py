@@ -5,11 +5,15 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>] [--smoke]
 Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
 ``BENCH_<group>.json`` files (one JSON list of
 ``{op, shape, median_ms, events_per_s, ...}`` rows per group, currently
-``kernels``, ``link`` and ``transport``) so the perf trajectory across PRs
-can be diffed without parsing the CSV.
+``kernels``, ``link``, ``transport`` and ``wire``) so the perf trajectory
+across PRs can be diffed without parsing the CSV.
 
 ``--smoke`` runs a reduced module set with shrunk shapes — fast enough for
-the tier-1 time budget while still producing all three JSON files.
+the tier-1 time budget while still producing all four JSON files.  Smoke
+rows are stamped ``"smoke": true`` and must NEVER be committed: the
+committed ``BENCH_*.json`` are full-shape numbers, and
+``tools/check_docs.py`` fails CI if a smoke-stamped (or known
+smoke-shaped) artifact lands in the repo root.
 
 Modules:
   bench_aggregation  paper §3.1 throughput claims (the central table)
@@ -23,6 +27,9 @@ Modules:
                      head-to-head (8 forced host devices in a subprocess;
                      rows carry backend, mesh shape, credit_stalls and the
                      hop-by-hop stall breakdown)
+  bench_wire         extoll vs ethernet wire profiles on every backend:
+                     frame-exact bytes_on_wire, wire efficiency and
+                     latency percentiles (+ codec round-trip row)
 """
 from __future__ import annotations
 
@@ -41,10 +48,11 @@ MODULES = [
     "bench_moe_dispatch",
     "bench_kernels",
     "bench_transport",
+    "bench_wire",
 ]
 
 SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels",
-                 "bench_transport"]
+                 "bench_transport", "bench_wire"]
 
 
 def median_ms(fn, *args, iters: int = 15) -> float:
@@ -78,6 +86,8 @@ class Reporter:
               events_per_s: float | None = None, notes: str = "",
               extra: dict | None = None):
         row = {"op": op, "shape": shape, "median_ms": round(med_ms, 6)}
+        if self.smoke:
+            row["smoke"] = True     # tools/check_docs.py refuses these
         if events_per_s is not None:
             row["events_per_s"] = round(events_per_s)
         if notes:

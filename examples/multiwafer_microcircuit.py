@@ -7,12 +7,17 @@ efficiency, deadline misses) — the numbers the Extoll link budget cares
 about — plus per-population firing rates.
 
 NOTE: must run as its own process (forces 4 host devices).
-Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py [torus2d|torus3d]
-(arg selects the transport backend; default "alltoall".  "torus2d" walks
-dimension-ordered neighbor hops on a 2x2 device torus, "torus3d" on a
-1x2x2 torus whose Z rings are the wafer-stacking axis; both report the
+Run:  PYTHONPATH=src python examples/multiwafer_microcircuit.py \
+          [alltoall|torus2d|torus3d] [extoll|ethernet]
+(first arg selects the transport backend; default "alltoall".  "torus2d"
+walks dimension-ordered neighbor hops on a 2x2 device torus, "torus3d" on
+a 1x2x2 torus whose Z rings are the wafer-stacking axis; both report the
 link-level hop/forwarding stats with hop-by-hop credit flow control
-available via the config's link_credits.)
+available via the config's link_credits.  Second arg selects the wire
+protocol profile (repro.wire): frame-exact bytes_on_wire and the
+per-event latency percentiles are reported for it — run once with
+"extoll" and once with "ethernet" to see the paper's protocol-tax and
+switch-latency comparison.)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -25,11 +30,12 @@ import numpy as np
 
 from repro.configs import brainscales
 from repro.core import aggregator
-from repro.launch.mesh import make_wafer_mesh, wafer_torus_shape
+from repro.launch.mesh import (make_wafer_mesh, wafer_torus_shape,
+                               wafer_wire_format)
 from repro.snn import microcircuit as mc, network, simulator as sim
 
 
-def main(transport: str = "alltoall"):
+def main(transport: str = "alltoall", wire_format: str = "extoll"):
     spec = mc.MicrocircuitSpec(scale=0.004)
     w, is_inh = spec.weight_matrix()
     print(f"microcircuit: {spec.n_neurons} neurons, "
@@ -39,7 +45,8 @@ def main(transport: str = "alltoall"):
     print(f"partition: 4 wafer shards x {part.per_shard} neurons, "
           f"max fan-out {part.fanout.shape[1]} shards/source")
 
-    bs = dataclasses.replace(brainscales.CONFIG, transport=transport)
+    bs = dataclasses.replace(brainscales.CONFIG, transport=transport,
+                             wire_format=wire_format)
     cfg = sim.SimConfig(
         n_shards=4, per_shard=part.per_shard,
         max_fan=part.fanout.shape[1],
@@ -78,6 +85,22 @@ def main(transport: str = "alltoall"):
           f"-> bucket aggregation saves "
           f"{int(naive.bytes) / max(int(wire), 1):.1f}x")
     print(f"deadline misses: {int(miss)}   bucket overflows: {int(ovf)}")
+    # frame-exact wire accounting + the per-event latency distribution of
+    # the configured protocol profile (repro.wire); per-profile wire
+    # EFFICIENCY needs the hop-weighted (src, dst) count matrix and lives
+    # in BENCH_wire.json (benchmarks/bench_wire.py), not here
+    fmt = wafer_wire_format(wire_format)
+    on_wire = int(np.asarray(stats.link.bytes_on_wire).sum())
+    lat = stats.latency
+    n_win = np.asarray(lat.p50_us).shape[1]
+    p50 = float(np.asarray(lat.p50_us)[:, 1:].mean()) if n_win > 1 else 0.0
+    p99 = float(np.asarray(lat.p99_us).max())
+    lmax = float(np.asarray(lat.max_us).max())
+    print(f"wire profile '{fmt.name}': {on_wire} bytes on wire "
+          f"(frame-exact; {fmt.header_bytes + fmt.crc_bytes} B/frame tax, "
+          f"{fmt.gap_bytes} B gap, {fmt.cell_bytes} B cells)")
+    print(f"event latency: p50 {p50:.2f} us (mean over windows), "
+          f"p99 {p99:.2f} us, max {lmax:.2f} us")
     if transport in ("torus2d", "torus3d"):
         link = stats.link
         print(f"torus link stats: {int(np.asarray(link.hops)[0, 0])} "
@@ -91,4 +114,5 @@ def main(transport: str = "alltoall"):
 
 
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "alltoall")
+    main(sys.argv[1] if len(sys.argv) > 1 else "alltoall",
+         sys.argv[2] if len(sys.argv) > 2 else "extoll")

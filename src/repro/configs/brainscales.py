@@ -30,6 +30,13 @@ class BrainScaleSConfig:
     torus_nz: int = 0                # wafer axis (torus3d only)
     link_credits: int = 0
     notify_latency: int = 2
+    # wire protocol profile (repro.wire): "extoll" (64 B cells, low header
+    # tax, sub-us switches) or "ethernet" (1500 B MTU, full Eth+IP+UDP
+    # stack, GbE timing) — governs frame-exact bytes_on_wire and the
+    # per-event latency model; step_us converts systemtime steps to wire
+    # microseconds (BrainScaleS ~1000x acceleration).
+    wire_format: str = "extoll"
+    step_us: float = 0.1
 
     def transport_fields(self) -> dict:
         """The transport-selection kwargs of ``snn.simulator.SimConfig``
@@ -37,7 +44,8 @@ class BrainScaleSConfig:
         return dict(transport=self.transport, torus_nx=self.torus_nx,
                     torus_ny=self.torus_ny, torus_nz=self.torus_nz,
                     link_credits=self.link_credits,
-                    notify_latency=self.notify_latency)
+                    notify_latency=self.notify_latency,
+                    wire_format=self.wire_format, step_us=self.step_us)
 
 
 CONFIG = BrainScaleSConfig()

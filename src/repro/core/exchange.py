@@ -7,9 +7,12 @@ One "wafer shard" per mesh device along a named axis.  A flush window is:
                    lookup (§3, LUT 1) and destination-bucketed binning with
                    static capacity (§3.1) in one sort-based pass
   2. **transport**  — a pluggable backend (``repro.transport``) ships every
-                   bucket to its owner:
+                   bucket to its owner; each (event, guid) pair is one
+                   64-bit wire word (``repro.wire.codec``), and the
+                   backend's ``WireFormat`` profile prices the window
+                   (frame-exact ``bytes_on_wire``, per-hop latency):
 
-                   * ``"alltoall"`` — events|guids|counts packed into ONE
+                   * ``"alltoall"`` — wire words|counts packed into ONE
                      ``(n_shards, 2·capacity+1)`` u32 buffer, one global
                      ``all_to_all`` per window; the fabric as a crossbar,
                      paying the latency-bound hop once, exactly like the
@@ -52,6 +55,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import transport as tp
+from repro import wire
 from repro.core import aggregator, events as ev
 from repro.core.routing import RoutingTables
 
@@ -68,8 +72,15 @@ class ExchangeOut(NamedTuple):
     wire_bytes: jax.Array    # () i32 off-shard bytes this window (all hops)
     sent_mask: jax.Array     # (n_shards,) bool False = bucket row deferred
                              #   by link flow control (re-offer next window)
-    link: tp.LinkStats       # per-window link-level stats
+    link: tp.LinkStats       # per-window link-level stats (incl. the exact
+                             #   frame-level bytes_on_wire of the backend's
+                             #   WireFormat profile)
     link_state: tp.LinkState  # advanced credit state (thread across windows)
+    latency: wire.LatencySummary  # wire-latency digest of this shard's
+                             #   ADMITTED off-shard rows: per traversed
+                             #   link, switch latency + frame serialization
+                             #   (repro.wire.latency; no waiting term — a
+                             #   one-shot window has none)
 
 
 def exchange_window(
@@ -83,8 +94,14 @@ def exchange_window(
     impl: str = "auto",
     transport: tp.Transport | None = None,
     link_state: tp.LinkState | None = None,
+    wire_format: str | wire.WireFormat = "extoll",
 ) -> ExchangeOut:
-    """One flush window of the spike fabric; call inside shard_map."""
+    """One flush window of the spike fabric; call inside shard_map.
+
+    ``wire_format`` selects the frame profile of the default transport;
+    an explicitly passed ``transport`` keeps its own profile (the single
+    source of truth for byte and latency accounting).
+    """
 
     # 1. fused route + aggregate (the paper's LUT 1 + §3.1 buckets)
     if impl in ("auto", "fused", "pallas"):
@@ -99,19 +116,19 @@ def exchange_window(
         b = aggregator.aggregate(words, dest, guid, n_shards, capacity,
                                  impl=impl)
 
-    # 2. transport ships every bucket (events+guids payload, counts packed
-    #    by the backend; alltoall lowers to exactly ONE all_to_all)
+    # 2. transport ships every bucket; each (event, guid) pair is one
+    #    64-bit wire word (repro.wire.codec: deadline | label | guid meta
+    #    lane | valid), lane-planar in a single u32 buffer so alltoall
+    #    still lowers to exactly ONE all_to_all
     if transport is None:
-        transport = tp.create("alltoall", n_shards=n_shards)
+        transport = tp.create("alltoall", n_shards=n_shards,
+                              wire_format=wire_format)
     if link_state is None:
         link_state = transport.init_state()
-    payload = jnp.concatenate(
-        [b.data, jax.lax.bitcast_convert_type(b.guids, jnp.uint32)], axis=1)
+    payload = wire.encode_planar(b.data, b.guids)
     out = transport.exchange(link_state, payload, b.counts,
                              axis_name=axis_name)
-    recv_events = out.recv_payload[:, :capacity]
-    recv_guids = jax.lax.bitcast_convert_type(out.recv_payload[:, capacity:],
-                                              jnp.int32)
+    recv_events, recv_guids = wire.decode_planar(out.recv_payload)
     recv_counts = out.recv_counts
 
     # mask out slots beyond the per-source count
@@ -126,6 +143,16 @@ def exchange_window(
     bits = (masks[None, :] >> jnp.arange(n_links, dtype=jnp.uint32)[:, None]) & 1
     link_events = jnp.where(bits.astype(bool), flat_ev[None, :], ev.INVALID_EVENT)
 
+    # per-event wire latency of the rows THIS shard admitted: every
+    # traversed link charges switch latency + one re-serialization of the
+    # row's frame train (store-and-forward); local rows never hit a link
+    my = jax.lax.axis_index(axis_name)
+    hops_row = transport.route_hops()[my]
+    lat_us = wire.hop_latency_us(transport.wire_fmt, b.counts, hops_row)
+    lat_w = jnp.where((jnp.arange(n_shards) != my) & out.sent_mask,
+                      b.counts, 0)
+    latency = wire.summarize_latency(lat_us, lat_w)
+
     return ExchangeOut(
         recv_events=recv_events,
         recv_guids=recv_guids,
@@ -137,19 +164,23 @@ def exchange_window(
         sent_mask=out.sent_mask,
         link=out.stats,
         link_state=out.state,
+        latency=latency,
     )
 
 
 def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
                   n_addr_per_shard: int, n_links: int = 8, impl: str = "auto",
                   transport: str = "alltoall",
-                  transport_opts: dict | None = None):
+                  transport_opts: dict | None = None,
+                  wire_format: str | wire.WireFormat = "extoll"):
     """Build the jitted multi-shard exchange.
 
     ``transport`` selects the backend
     (``"alltoall" | "torus2d" | "torus3d"``);
     ``transport_opts`` are forwarded to :func:`repro.transport.create`
-    (torus mesh shape, link credits...).  Returns
+    (torus mesh shape, link credits...).  ``wire_format`` (or an explicit
+    ``transport_opts["wire_format"]``) selects the frame-accounting /
+    latency profile (``"extoll"`` | ``"ethernet"``).  Returns
     f(words[(n_shards, N)], tables[stacked over shard dim]) -> ExchangeOut
     with a leading shard dimension.  ``tables`` is a RoutingTables whose
     arrays carry a leading (n_shards,) dim.  Link-flow-control state starts
@@ -159,6 +190,7 @@ def make_exchange(mesh, axis_name: str, *, n_shards: int, capacity: int,
     from jax.experimental.shard_map import shard_map
 
     transport_opts = dict(transport_opts or {})
+    transport_opts.setdefault("wire_format", wire_format)
     if transport in ("torus2d", "torus3d"):
         # a bucket row holds up to `capacity` events; the backend raises
         # if link_credits could never admit a full row (livelock guard)

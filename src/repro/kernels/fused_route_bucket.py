@@ -56,6 +56,10 @@ class FusedWindow(NamedTuple):
     deferred: () i32 events carried to the next window via ``residue``
     dropped:  () i32 overflow events that did not fit the residue buffer
     offered:  () i32 valid routed events offered this window
+    residue_meta: (residue_len,) i32 the deferred events' meta values (the
+              ``guids`` operand, e.g. the simulator's per-event injection
+              timestamps), aligned with ``residue``; None unless requested
+              via ``with_residue_meta`` (explicit-meta path only)
     """
 
     buckets: Buckets
@@ -63,6 +67,7 @@ class FusedWindow(NamedTuple):
     deferred: jax.Array
     dropped: jax.Array
     offered: jax.Array
+    residue_meta: jax.Array | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +164,8 @@ def _placement_jnp(first, counts, swords_pad, aux, n_dest: int, capacity: int,
 # ---------------------------------------------------------------------------
 
 def _finish(skey, swords, aux, n_dest: int, capacity: int, residue_len: int,
-            *, routed: bool, use_pallas: bool | None, interpret: bool | None):
+            *, routed: bool, use_pallas: bool | None, interpret: bool | None,
+            with_residue_meta: bool = False):
     n = swords.shape[0]
     edges = jnp.searchsorted(skey, jnp.arange(n_dest + 1, dtype=skey.dtype))
     first = edges[:-1].astype(jnp.int32)
@@ -170,6 +176,10 @@ def _finish(skey, swords, aux, n_dest: int, capacity: int, residue_len: int,
         use_pallas = dispatch.use_pallas()
     if interpret is None:
         interpret = dispatch.default_interpret()
+    if with_residue_meta and routed:
+        raise ValueError("with_residue_meta needs per-event meta (the "
+                         "explicit-guids path), not a routed guid LUT")
+    smeta = aux if not routed else None          # (n,) sorted per-event meta
     if not routed:
         aux = jnp.concatenate([aux, jnp.zeros((capacity,), aux.dtype)])
     if use_pallas:
@@ -184,37 +194,54 @@ def _finish(skey, swords, aux, n_dest: int, capacity: int, residue_len: int,
     overflow = (offered - jnp.sum(accepted)).astype(jnp.int32)
     buckets = Buckets(data, gui, accepted, overflow)
 
+    res_meta = None
     if residue_len:
         # overflow events = sorted index >= first-of-dest + capacity
         first_of = jnp.take(first, jnp.minimum(skey, n_dest - 1))
         pos = jnp.arange(n, dtype=jnp.int32) - first_of
         ovf = (skey < n_dest) & (pos >= capacity)
-        _, rwords = lax.sort(
-            (jnp.where(ovf, 0, 1).astype(jnp.int32), swords),
-            num_keys=1, is_stable=True)
+        ovfkey = jnp.where(ovf, 0, 1).astype(jnp.int32)
         r = min(residue_len, n)
         deferred = jnp.minimum(overflow, r)
-        res = jnp.where(jnp.arange(r) < deferred, rwords[:r], ev.INVALID_EVENT)
+        live_r = jnp.arange(r) < deferred
+        if with_residue_meta:
+            _, rwords, rmeta = lax.sort(
+                (ovfkey, swords, smeta.astype(jnp.int32)),
+                num_keys=1, is_stable=True)
+            res_meta = jnp.where(live_r, rmeta[:r], 0)
+            if residue_len > n:
+                res_meta = jnp.concatenate(
+                    [res_meta, jnp.zeros((residue_len - n,), jnp.int32)])
+        else:
+            _, rwords = lax.sort((ovfkey, swords), num_keys=1, is_stable=True)
+        res = jnp.where(live_r, rwords[:r], ev.INVALID_EVENT)
         if residue_len > n:
             res = jnp.concatenate(
                 [res, jnp.full((residue_len - n,), ev.INVALID_EVENT)])
         dropped = overflow - deferred
     else:
         res = jnp.zeros((0,), jnp.uint32)
+        if with_residue_meta:
+            res_meta = jnp.zeros((0,), jnp.int32)
         deferred = jnp.zeros((), jnp.int32)
         dropped = overflow
     return FusedWindow(buckets, res, deferred.astype(jnp.int32),
-                       dropped.astype(jnp.int32), offered)
+                       dropped.astype(jnp.int32), offered, res_meta)
 
 
 def fused_aggregate(words, dest, guids, n_dest: int, capacity: int, *,
                     residue_len: int = 0, use_pallas: bool | None = None,
-                    interpret: bool | None = None) -> FusedWindow:
+                    interpret: bool | None = None,
+                    with_residue_meta: bool = False) -> FusedWindow:
     """Sort-based aggregation with explicit per-event destinations/guids.
 
     Drop-in (via ``.buckets``) for ``aggregator.aggregate`` semantics:
     window order within each destination, capacity clip, invalid events
-    (valid bit clear or dest out of range) ignored.
+    (valid bit clear or dest out of range) ignored.  ``guids`` is an
+    arbitrary i32 meta value riding with each event (destination GUID —
+    or the simulator's injection timestamp); ``with_residue_meta`` also
+    carries it for the deferred events (``FusedWindow.residue_meta``),
+    so meta survives overflow re-offer round-trips.
     """
     dest = dest.astype(jnp.int32)
     valid = ev.is_valid(words) & (dest >= 0) & (dest < n_dest)
@@ -222,7 +249,8 @@ def fused_aggregate(words, dest, guids, n_dest: int, capacity: int, *,
     skey, swords, sguids = lax.sort((key, words, guids.astype(jnp.int32)),
                                     num_keys=1, is_stable=True)
     return _finish(skey, swords, sguids, n_dest, capacity, residue_len,
-                   routed=False, use_pallas=use_pallas, interpret=interpret)
+                   routed=False, use_pallas=use_pallas, interpret=interpret,
+                   with_residue_meta=with_residue_meta)
 
 
 def fused_route_aggregate(words, dest_lut, guid_lut, n_dest: int,

@@ -58,3 +58,18 @@ def wafer_torus_shape(n_shards: int, ndim: int = 2) -> tuple:
     if ndim == 3:
         return default_shape3d(n_shards)
     return default_shape(n_shards)
+
+
+def wafer_wire_format(profile: str = "extoll"):
+    """The wire protocol profile of the wafer fabric's links.
+
+    The physical analogy again: the ICI torus is the Extoll fabric
+    (``"extoll"``: 64-byte cells, ~16 B/frame tax, sub-µs cut-through
+    hops), the DCN pod hop is the commodity comparison (``"ethernet"``:
+    full Eth+IP+UDP stack, minimum frames, store-and-forward switches).
+    Returns the :class:`repro.wire.framing.WireFormat` used by the
+    transports' frame-exact ``bytes_on_wire`` accounting and the
+    per-event latency model.
+    """
+    from repro.wire import get_profile
+    return get_profile(profile)

@@ -51,6 +51,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import transport as tp
+from repro import wire
 from repro.core import aggregator, events as ev
 from repro.core.routing import RoutingTables
 from repro.snn import lif, network
@@ -73,6 +74,14 @@ class SimConfig(NamedTuple):
     link_credits: int = 0     # per-window events per egress link (0 = off;
                               #   spent on EVERY hop of a row's route)
     notify_latency: int = 2   # windows before spent link credits return
+    wire_format: str = "extoll"   # frame/latency profile (repro.wire:
+                              #   "extoll" | "ethernet") for bytes_on_wire
+                              #   and the per-event latency model
+    step_us: float = 0.1      # wall-clock per dt step on the accelerated
+                              #   substrate (BrainScaleS ~1000x: 0.1 ms
+                              #   biological -> 0.1 us hardware); converts
+                              #   window-quantized waiting into the wire
+                              #   latency unit
 
 
 class ShardState(NamedTuple):
@@ -86,11 +95,19 @@ class ShardState(NamedTuple):
 class PendingWindow(NamedTuple):
     """The pipelined half of the scan carry: window k's aggregated buckets,
     exchanged+decoded at the start of iteration k+1, plus the deferred
-    events re-offered into window k+1's aggregation."""
+    events re-offered into window k+1's aggregation.
+
+    ``meta``/``residue_meta`` carry each event's *injection systemtime
+    step* alongside it — through the buckets, the 64-bit wire words of
+    the exchange, transport deferral and residue re-offers — so the
+    decode side can charge exact waiting time (``WindowStats.latency``).
+    """
 
     data: jax.Array           # (n_shards, capacity) u32 bucketed events
+    meta: jax.Array           # (n_shards, capacity) i32 injection steps
     counts: jax.Array         # (n_shards,) i32 accepted per destination
     residue: jax.Array        # (residue,) u32 deferred events (INVALID pad)
+    residue_meta: jax.Array   # (residue,) i32 their injection steps
 
 
 class WindowStats(NamedTuple):
@@ -115,6 +132,15 @@ class WindowStats(NamedTuple):
                               # buckets; same one-row shift as deadline_miss;
                               # its deferred_events re-enter THIS row's
                               # `offered`)
+    latency: wire.LatencySummary  # per-event wire latency of the events
+                              # DELIVERED by that same exchange (window
+                              # k-1's buckets; row 0 is zero, the drain's
+                              # deliveries are discarded like `link`):
+                              # window-quantized waiting since each event's
+                              # injection step (deferral/residue rounds
+                              # accumulate) + per traversed link one switch
+                              # latency + one frame-train serialization of
+                              # the row (repro.wire.latency)
 
 
 def _simulate_steps(state: ShardState, cfg: SimConfig, bg_rate: jax.Array,
@@ -144,7 +170,10 @@ def _spikes_to_events(spikes: jax.Array, t0: jax.Array, delays: jax.Array,
     """Compact (window, per) spike raster into <= e_max packed event words.
 
     Each spike yields `max_fan` replica events (addr = id*fan + k); invalid
-    replicas are dropped by the routing LUT (NO_ROUTE).
+    replicas are dropped by the routing LUT (NO_ROUTE).  Also returns each
+    replica's absolute injection step (``t0 + step``, un-wrapped i32) — the
+    meta value the wire layer threads to the decode side for the latency
+    model.
     """
     w, per = spikes.shape
     flat = spikes.reshape(-1)                                 # (w*per,)
@@ -162,7 +191,8 @@ def _spikes_to_events(spikes: jax.Array, t0: jax.Array, delays: jax.Array,
     addr = (sel_id[:, None] * cfg.max_fan + k[None, :]).reshape(-1)
     words = ev.pack(addr, jnp.repeat(ts, cfg.max_fan),
                     valid=jnp.repeat(sel, cfg.max_fan))
-    return words, lost.astype(jnp.int32)
+    inject = jnp.repeat((t0 + sel_step).astype(jnp.int32), cfg.max_fan)
+    return words, inject, lost.astype(jnp.int32)
 
 
 def _apply_events(state: ShardState, words: jax.Array, counts: jax.Array,
@@ -213,9 +243,9 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
                                             fabric quiesces).
     """
     if axis_name is not None:
-        opts = {}
+        opts = {"wire_format": cfg.wire_format}
         if cfg.transport in ("torus2d", "torus3d"):
-            opts = dict(nx=cfg.torus_nx, ny=cfg.torus_ny,
+            opts.update(nx=cfg.torus_nx, ny=cfg.torus_ny,
                         link_credits=cfg.link_credits,
                         notify_latency=cfg.notify_latency,
                         max_row_events=cfg.capacity)  # livelock guard
@@ -223,7 +253,8 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
                 opts["nz"] = cfg.torus_nz
         backend = tp.create(cfg.transport, n_shards=cfg.n_shards, **opts)
     else:
-        backend = tp.Transport(cfg.n_shards)      # state-only stub
+        backend = tp.Transport(cfg.n_shards, wire_format=cfg.wire_format)
+        # state-only stub (no collective; crossbar route_hops)
     # can the transport ever refuse a bucket?  (static: gates the
     # deferred-word re-offer plumbing out of the alltoall/uncredited path)
     can_defer = (axis_name is not None
@@ -233,8 +264,10 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
     def init_pending() -> PendingWindow:
         return PendingWindow(
             data=jnp.zeros((cfg.n_shards, cfg.capacity), jnp.uint32),
+            meta=jnp.zeros((cfg.n_shards, cfg.capacity), jnp.int32),
             counts=jnp.zeros((cfg.n_shards,), jnp.int32),
             residue=jnp.full((cfg.residue,), ev.INVALID_EVENT),
+            residue_meta=jnp.zeros((cfg.residue,), jnp.int32),
         )
 
     def init_link() -> tp.LinkState:
@@ -242,21 +275,43 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
 
     def _exchange(pend: PendingWindow, lstate: tp.LinkState, *,
                   enforce_credits: bool):
-        """Ship window k-1's buckets through the transport backend."""
+        """Ship window k-1's buckets through the transport backend.
+
+        Each (event, injection-step) pair travels as one 64-bit wire word
+        (``repro.wire.codec``), lane-planar in the u32 payload.
+        """
         if axis_name is None:
             full = jnp.ones((cfg.n_shards,), bool)
-            return (pend.data, pend.counts, full, tp.zero_link_stats(),
-                    lstate)
-        out = backend.exchange(lstate, pend.data, pend.counts,
+            return (pend.data, pend.meta, pend.counts, full,
+                    tp.zero_link_stats(), lstate)
+        payload = wire.encode_planar(pend.data, pend.meta)
+        out = backend.exchange(lstate, payload, pend.counts,
                                axis_name=axis_name,
                                enforce_credits=enforce_credits)
-        return (out.recv_payload, out.recv_counts, out.sent_mask, out.stats,
-                out.state)
+        recv_events, recv_meta = wire.decode_planar(out.recv_payload)
+        return (recv_events, recv_meta, out.recv_counts, out.sent_mask,
+                out.stats, out.state)
 
     def _decode(state: ShardState, recv, counts, w_exc, w_inh):
         src_shard = jnp.arange(cfg.n_shards)
         return _apply_events(state, recv, counts, w_exc, w_inh, cfg,
                              src_shard)
+
+    fmt = backend.wire_fmt
+
+    def _window_latency(state: ShardState, recv_meta, counts):
+        """Wire latency of the events just delivered: waiting since each
+        event's injection step (state.t == the decoded window's end, so
+        deferral and residue rounds accumulate whole windows) + the row's
+        per-link switch + frame-serialization charges."""
+        me = (jax.lax.axis_index(axis_name) if axis_name is not None
+              else jnp.int32(0))
+        slot = jnp.arange(cfg.capacity)[None, :]
+        live = slot < counts[:, None]
+        wait_us = (state.t - recv_meta).astype(jnp.float32) * cfg.step_us
+        hop_us = wire.hop_latency_us(fmt, counts, backend.route_hops()[me])
+        lat = jnp.maximum(wait_us, 0.0) + hop_us[:, None]
+        return wire.summarize_latency(lat, live.astype(jnp.int32))
 
     def body(carry, tables: RoutingTables, w_exc, w_inh, delays, bg_rate,
              bg_w):
@@ -264,8 +319,9 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         # 1. exchange + decode window k-1 (same systemtime as unpipelined:
         #    state.t here == that window's end); the route/aggregate below
         #    never reads the collective's result, so the two can overlap.
-        recv, counts, sent_mask, lstats, lstate = _exchange(
+        recv, rmeta, counts, sent_mask, lstats, lstate = _exchange(
             pend, lstate, enforce_credits=True)
+        latency = _window_latency(state, rmeta, counts)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         # 2. simulate window k
         t0 = state.t
@@ -273,20 +329,29 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         # 3. fused route+aggregate of window k's spikes + deferred events;
         #    transport-deferred buckets go FIRST, then the residue, then
         #    fresh spikes — oldest deadlines win bucket slots (FIFO
-        #    back-pressure, no starvation under sustained overflow)
-        words, lost = _spikes_to_events(spikes, t0, delays, cfg)
+        #    back-pressure, no starvation under sustained overflow).  Each
+        #    event's injection step rides along as i32 meta (the guids
+        #    operand) so latency accumulates across re-offers.
+        words, inject, lost = _spikes_to_events(spikes, t0, delays, cfg)
         if can_defer:
             slot = jnp.arange(cfg.capacity)[None, :]
             held = (~sent_mask[:, None]) & (slot < pend.counts[:, None])
             deferred_words = jnp.where(held, pend.data,
                                        ev.INVALID_EVENT).reshape(-1)
+            deferred_meta = jnp.where(held, pend.meta, 0).reshape(-1)
             words = jnp.concatenate([deferred_words, pend.residue, words])
+            inject = jnp.concatenate([deferred_meta, pend.residue_meta,
+                                      inject])
         else:
             words = jnp.concatenate([pend.residue, words])
+            inject = jnp.concatenate([pend.residue_meta, inject])
         from repro.kernels import fused_route_bucket as frb
-        fw = frb.fused_route_aggregate(
-            words, tables.dest_of_addr, tables.guid_of_addr, cfg.n_shards,
-            cfg.capacity, residue_len=cfg.residue)
+        addr = ev.address(words).astype(jnp.int32)
+        dest = jnp.take(tables.dest_of_addr,
+                        jnp.minimum(addr, tables.dest_of_addr.shape[0] - 1))
+        fw = frb.fused_aggregate(
+            words, dest, inject, cfg.n_shards, cfg.capacity,
+            residue_len=cfg.residue, with_residue_meta=True)
         b = fw.buckets
         if axis_name is not None:
             my = jax.lax.axis_index(axis_name)
@@ -303,8 +368,10 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
             offered=fw.offered,
             deferred=fw.deferred,
             link=lstats,
+            latency=latency,
         )
-        return (state, PendingWindow(b.data, b.counts, fw.residue),
+        return (state, PendingWindow(b.data, b.guids, b.counts, fw.residue,
+                                     fw.residue_meta),
                 lstate), stats
 
     def drain(state: ShardState, pend: PendingWindow, lstate: tp.LinkState,
@@ -314,13 +381,14 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         reported via the last window's ``deferred``).  Credits are
         bypassed — the end-of-run flush quiesces the fabric, so no event
         is stranded in a stalled bucket.  The drain exchange's LinkStats
-        are intentionally discarded: folding them into the last row would
+        and latency digest are intentionally discarded: folding them into
+        the last row would
         break the per-row identities (offered_k == events_sent_{k-1},
         offered == sent + deferred) that tests pin, so per-run link totals
         cover the n_windows scanned exchanges only (deadline misses, a
         pure accumulator with no such identity, ARE folded in)."""
-        recv, counts, _, _, _ = _exchange(pend, lstate,
-                                          enforce_credits=False)
+        recv, _, counts, _, _, _ = _exchange(pend, lstate,
+                                             enforce_credits=False)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         return state, miss.astype(jnp.int32)
 

@@ -17,6 +17,10 @@ BACKENDS = ("alltoall", "torus2d", "torus3d")
 def create(name: str, *, n_shards: int, **opts) -> Transport:
     """Instantiate a transport backend by config key.
 
+    Options (all backends): ``wire_format`` — a
+    :class:`~repro.wire.framing.WireFormat` or profile name
+    (``"extoll"`` default, ``"ethernet"``) governing the frame-level
+    ``bytes_on_wire`` accounting and the wire-latency charges.
     Options (torus2d / torus3d): ``nx``/``ny``[/``nz``] mesh shape (0 =
     most-square / most-cubic factorization), ``link_credits`` per-window
     event budget of EVERY directed egress link in the fabric (0 =
@@ -27,9 +31,11 @@ def create(name: str, *, n_shards: int, **opts) -> Transport:
     """
     if name == "alltoall":
         from repro.transport.alltoall import AllToAllTransport
-        if opts:
-            raise TypeError(f"alltoall takes no options, got {opts}")
-        return AllToAllTransport(n_shards)
+        extra = set(opts) - {"wire_format"}
+        if extra:
+            raise TypeError(f"alltoall takes no options beyond wire_format, "
+                            f"got {sorted(extra)}")
+        return AllToAllTransport(n_shards, **opts)
     if name == "torus2d":
         from repro.transport.torus import Torus2DTransport
         return Torus2DTransport(n_shards, **opts)

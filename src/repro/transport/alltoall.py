@@ -10,7 +10,10 @@ window (asserted in tests).
 
 No per-link model: the fabric is treated as a full crossbar, every bucket
 is always admitted (``sent_mask`` all True) and ``LinkStats`` carries only
-the off-shard wire-byte cost.
+the off-shard wire-byte cost — both the legacy Extoll packet estimate
+(``forwarded_bytes``) and the exact frame-level accounting of the
+configured :class:`~repro.wire.framing.WireFormat` (``bytes_on_wire``);
+every off-shard row crosses exactly one link (``route_hops``).
 """
 from __future__ import annotations
 
@@ -20,6 +23,7 @@ import jax.numpy as jnp
 from repro.core import aggregator
 from repro.transport import base
 from repro.transport.base import pack_payload, unpack_payload
+from repro.wire import framing as wire_framing
 
 
 class AllToAllTransport(base.Transport):
@@ -44,6 +48,8 @@ class AllToAllTransport(base.Transport):
             sent_events=offered,
             delivered_events=jnp.sum(recv_counts).astype(jnp.int32),
             forwarded_bytes=aggregator.window_cost(off).bytes,
+            bytes_on_wire=jnp.sum(
+                wire_framing.frame_bytes(self.wire_fmt, off)).astype(jnp.int32),
         )
         return base.TransportOut(
             state=state,

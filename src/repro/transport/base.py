@@ -46,6 +46,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.flow_control import CreditBank
+from repro.wire import framing as wire_framing
+from repro.wire.profiles import get_profile
 
 # Carried per-link flow-control state.  ``alltoall`` uses a zero-link bank
 # so the pytree structure is uniform across backends.
@@ -77,7 +79,12 @@ class LinkStats(NamedTuple):
     delivered_events: jax.Array  # events received by this shard
     credit_stalls: jax.Array     # bucket rows deferred for lack of credits
     hops: jax.Array              # neighbor hops executed this window
-    forwarded_bytes: jax.Array   # wire bytes shipped over links (all hops)
+    forwarded_bytes: jax.Array   # wire bytes shipped over links (all hops),
+                                 #   legacy Extoll packet model (events.py)
+    bytes_on_wire: jax.Array     # exact frame-level bytes per the backend's
+                                 #   WireFormat profile (header+CRC+cell
+                                 #   padding+min-frame+gap, every hop pays;
+                                 #   see repro.wire.framing)
     max_in_flight: jax.Array     # peak store-and-forward buffer occupancy
     stalled_by_hop: jax.Array    # (max_hops,) deferred events by the route
                                  #   hop that refused them
@@ -87,7 +94,7 @@ class LinkStats(NamedTuple):
 
 def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:
     z = jnp.zeros((), jnp.int32)
-    return LinkStats(z, z, z, z, z, z, z, z,
+    return LinkStats(z, z, z, z, z, z, z, z, z,
                      jnp.zeros((max_hops,), jnp.int32),
                      jnp.zeros((ndim,), jnp.int32))
 
@@ -127,12 +134,25 @@ class Transport:
 
     name: str = "base"
 
-    def __init__(self, n_shards: int):
+    def __init__(self, n_shards: int, *,
+                 wire_format: str | wire_framing.WireFormat = "extoll"):
         self.n_shards = n_shards
+        self.wire_fmt = get_profile(wire_format)
 
     def init_state(self) -> LinkState:
         from repro.core import flow_control as fc
         return fc.init_credits(0, 0, 1)
+
+    def route_hops(self) -> jax.Array:
+        """(n_shards, n_shards) i32 links traversed by a row s -> d.
+
+        The wire-latency model charges serialization + switch latency per
+        traversed link (``repro.wire.latency``).  Base/crossbar backends
+        pay exactly one link for any off-shard row; the torus backends
+        override this with the host model's per-pair hop counts.
+        """
+        n = self.n_shards
+        return jnp.ones((n, n), jnp.int32) - jnp.eye(n, dtype=jnp.int32)
 
     def exchange(self, state: LinkState, payload: jax.Array,
                  counts: jax.Array, *, axis_name: str,

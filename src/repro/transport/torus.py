@@ -61,6 +61,7 @@ from repro.core import aggregator
 from repro.core import flow_control as fc
 from repro.core.torus import Torus
 from repro.transport import base
+from repro.wire import framing as wire_framing
 
 def default_shape(n_shards: int) -> tuple[int, int]:
     """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
@@ -117,18 +118,24 @@ class TorusTransport(base.Transport):
     smaller row would still fit — the same head-of-line semantics the
     first-hop-only model had, extended along the whole route.
 
-    Memory note: the static route-incidence tensor is (n², K) with
-    ``K = n_shards * 2 * ndim`` — cubic in shard count, trivial for real
-    device counts (n=64 -> 1.5 M i8 entries) but not meant for
-    thousand-node host-side studies (that is ``core.torus.link_loads``).
+    Memory note: the admission tables hold only the *active-route
+    footprint* — the hop-ordered link sequence ``_link_seq`` of every
+    (src, dst) pair, (n², max_hops) i32 with ``max_hops = sum(d // 2)``
+    (~n^(1/ndim)) — NOT the dense (n², n·2·ndim) 0/1 route-incidence
+    tensor an earlier revision materialized (cubic in shard count; the
+    per-link need is recovered in-scan by gathering ``remaining`` at the
+    route's links).  n=64 in 3-D is now 98 KiB instead of 3 MiB; a test
+    pins the bound.  Thousand-node host-side studies still belong to
+    ``core.torus.link_loads``.
     """
 
     name = "torus"
 
     def __init__(self, n_shards: int, dims: tuple[int, ...], *,
                  link_credits: int = 0, notify_latency: int = 2,
-                 max_row_events: int = 0):
-        super().__init__(n_shards)
+                 max_row_events: int = 0,
+                 wire_format: str | wire_framing.WireFormat = "extoll"):
+        super().__init__(n_shards, wire_format=wire_format)
         if 0 < link_credits < max_row_events:
             raise ValueError(
                 f"link_credits ({link_credits}) must be >= the largest "
@@ -168,33 +175,35 @@ class TorusTransport(base.Transport):
     def _build_routes(self):
         """Host-side precompute of the per-pair dimension-ordered routes.
 
-        ``_incidence[s*n+d]`` is the 0/1 egress-link indicator (K,) of the
-        route s -> d (K = n_shards * n_links, link id = node * n_links +
-        direction); ``_link_seq`` the same links in hop order (-1 pad) so
-        stalls can be attributed to the blocking hop; ``_first_link`` hop
-        0 (-1 for local rows).  Derived from ``core.torus.Torus.route`` so
-        the data path, the credit path and the host model can never
-        disagree on a route.
+        ``_link_seq[s*n+d]`` is the route s -> d as hop-ordered egress
+        link ids (link id = node * n_links + direction, -1 pad; row 0 is
+        all -1 for local rows) — the active-route footprint, (n²,
+        max_hops) i32, which is ALL the admission scan needs: per-link
+        credit needs are gathered/scattered at these ids instead of
+        multiplying a dense (n², n·2·ndim) incidence tensor.  Derived
+        from ``core.torus.Torus.route`` so the data path, the credit path
+        and the host model can never disagree on a route.
+        ``_hops_matrix`` is the host model's per-pair hop count, served
+        to the wire-latency model via :meth:`route_hops`.
         """
         n, nl = self.n_shards, self.n_links
         host = self._host
         self.max_hops = max(sum(d // 2 for d in self.dims), 1)
-        inc = np.zeros((n * n, n * nl), np.int8)
         seq = np.full((n * n, self.max_hops), -1, np.int32)
-        first = np.full((n * n,), -1, np.int32)
         for s in range(n):
             for d in range(n):
                 if s == d:
                     continue
                 links = host.route_links(s, d)
                 for h, (u, dir_) in enumerate(links):
-                    lid = u * nl + dir_
-                    inc[s * n + d, lid] = 1
-                    seq[s * n + d, h] = lid
-                first[s * n + d] = seq[s * n + d, 0]
-        self._incidence = jnp.asarray(inc)
+                    seq[s * n + d, h] = u * nl + dir_
         self._link_seq = jnp.asarray(seq)
-        self._first_link = jnp.asarray(first)
+        ids = np.arange(n)
+        self._hops_matrix = jnp.asarray(
+            host.hops(ids[:, None], ids[None, :]).astype(np.int32))
+
+    def route_hops(self) -> jax.Array:
+        return self._hops_matrix
 
     # -- flow-control state ------------------------------------------------
     def init_state(self) -> base.LinkState:
@@ -243,24 +252,30 @@ class TorusTransport(base.Transport):
         def row(carry, r):
             remaining, blocked = carry
             c = flat[r]
-            need = self._incidence[r].astype(jnp.int32) * c
-            fl = self._first_link[r]
+            # active-route footprint: gather the route's links only — no
+            # dense (K,) incidence row is ever materialized
+            seq = self._link_seq[r]                      # (H,) hop-ordered
+            valid = seq >= 0
+            idx = jnp.maximum(seq, 0)
+            rem_at = remaining[idx]                      # (H,)
+            fl = seq[0]
             routed = (fl >= 0) & (c > 0)
-            feasible = jnp.all(remaining >= need)
+            feasible = jnp.all(~valid | (rem_at >= c))
             hol = blocked[jnp.maximum(fl, 0)]
             admit = ~routed | (feasible & ~hol)
-            spend = jnp.where(admit & routed, need, 0)
+            # spend c on every link of the route (links are distinct, pads
+            # contribute 0)
+            spend = jnp.where(admit & routed & valid, c, 0)
+            remaining = remaining.at[idx].add(-spend)
             # blocking hop: first route link short of credits (0 if only
             # the source FIFO head-of-line blocks an otherwise-fitting row)
-            seq = self._link_seq[r]
-            valid = seq >= 0
-            short = valid & (remaining[jnp.maximum(seq, 0)] < c)
+            short = valid & (rem_at < c)
             h_short = jnp.min(jnp.where(short, jnp.arange(H), H))
             stall = jnp.where(admit, -1,
                               jnp.where(feasible, 0, h_short))
             blocked = blocked.at[jnp.maximum(fl, 0)].set(
                 blocked[jnp.maximum(fl, 0)] | (routed & ~admit))
-            return (remaining - spend, blocked), (admit, stall)
+            return (remaining, blocked), (admit, stall)
 
         (remaining, _), (admit, stall) = lax.scan(
             row, (state.credits, jnp.zeros((K,), bool)), rows)
@@ -292,12 +307,19 @@ class TorusTransport(base.Transport):
             cnt = lax.bitcast_convert_type(v[:, :, -1], jnp.int32)
             return aggregator.window_cost(cnt.reshape(-1)).bytes
 
+        def owire(v):
+            # exact frame-level bytes of this hop: every bundle row is one
+            # frame train of the backend's WireFormat profile
+            cnt = lax.bitcast_convert_type(v[:, :, -1], jnp.int32)
+            return jnp.sum(wire_framing.frame_bytes(self.wire_fmt, cnt))
+
         for direction, v, perm, n_hops in (
             ("+", vp, perm_p, n // 2),
             ("-", vm, perm_m, (n - 1) // 2),
         ):
             for h in range(1, n_hops + 1):
                 acc["bytes"] += wire(v)
+                acc["owire"] += owire(v)
                 v = lax.ppermute(v, axis_name, perm)
                 src = (my_c - h) % n if direction == "+" else (my_c + h) % n
                 recv = recv.at[src].set(jnp.take(v, my_c, axis=0))
@@ -360,7 +382,7 @@ class TorusTransport(base.Transport):
         packed = base.pack_payload(
             jnp.where(admitted[:, None], payload, jnp.uint32(0)), cnt_in)
 
-        acc = {"bytes": jnp.int32(0), "hops": 0,
+        acc = {"bytes": jnp.int32(0), "owire": jnp.int32(0), "hops": 0,
                "in_flight": jnp.int32(0),
                "in_flight_phase": [jnp.int32(0)] * self.ndim}
 
@@ -390,6 +412,7 @@ class TorusTransport(base.Transport):
             credit_stalls=jnp.sum(~admitted & (counts > 0)).astype(jnp.int32),
             hops=jnp.int32(acc["hops"]),
             forwarded_bytes=acc["bytes"].astype(jnp.int32),
+            bytes_on_wire=acc["owire"].astype(jnp.int32),
             max_in_flight=acc["in_flight"].astype(jnp.int32),
             stalled_by_hop=stalled_by_hop,
             max_in_flight_by_phase=jnp.stack(acc["in_flight_phase"]),
@@ -418,7 +441,8 @@ class Torus2DTransport(TorusTransport):
 
     def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
                  link_credits: int = 0, notify_latency: int = 2,
-                 max_row_events: int = 0):
+                 max_row_events: int = 0,
+                 wire_format: str | wire_framing.WireFormat = "extoll"):
         if not nx and not ny:
             nx, ny = default_shape(n_shards)
         elif not ny:
@@ -427,7 +451,8 @@ class Torus2DTransport(TorusTransport):
             nx = n_shards // max(ny, 1)
         super().__init__(n_shards, (nx, ny), link_credits=link_credits,
                          notify_latency=notify_latency,
-                         max_row_events=max_row_events)
+                         max_row_events=max_row_events,
+                         wire_format=wire_format)
         self.nx, self.ny = nx, ny
 
 
@@ -439,7 +464,8 @@ class Torus3DTransport(TorusTransport):
 
     def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
                  nz: int = 0, link_credits: int = 0, notify_latency: int = 2,
-                 max_row_events: int = 0):
+                 max_row_events: int = 0,
+                 wire_format: str | wire_framing.WireFormat = "extoll"):
         known = [d for d in (nx, ny, nz) if d]
         if not known:
             nx, ny, nz = default_shape3d(n_shards)
@@ -458,5 +484,6 @@ class Torus3DTransport(TorusTransport):
             nx, ny, nz = (nx or missing, ny or missing, nz or missing)
         super().__init__(n_shards, (nx, ny, nz), link_credits=link_credits,
                          notify_latency=notify_latency,
-                         max_row_events=max_row_events)
+                         max_row_events=max_row_events,
+                         wire_format=wire_format)
         self.nx, self.ny, self.nz = nx, ny, nz

@@ -1,0 +1,45 @@
+"""Extoll wire subsystem — what a spike event costs ON THE WIRE.
+
+The layers above this package move abstract bucket rows; the paper's core
+claim (§1, and the follow-up "Demonstrating BrainScaleS-2 Inter-Chip
+Pulse-Communication using EXTOLL") is about the *wire*: a low-overhead
+packet protocol format and low per-hop latency are why Extoll beats
+Gigabit-Ethernet for pulse traffic.  This package makes those two
+quantities first-class between aggregation and transport:
+
+* :mod:`repro.wire.codec`    — pack spike events into 64-bit wire words
+  (timestamp + routable label + 32-bit meta lane, field widths from
+  config; Pallas pack/unpack kernel with XLA fallback, bit-exact
+  round-trip).
+* :mod:`repro.wire.framing`  — aggregate words into frames with a
+  configurable cell size / MTU and per-frame header+CRC overhead, so
+  ``LinkStats.bytes_on_wire`` is exact per protocol profile.
+* :mod:`repro.wire.profiles` — the two :class:`WireFormat` protocol
+  profiles the paper compares: ``extoll`` (64-byte cells, low header
+  tax, sub-µs switches) and ``ethernet`` (1500-byte MTU, full
+  Eth+IP+UDP header stack, store-and-forward switches).
+* :mod:`repro.wire.latency`  — the per-event latency model: per-hop
+  serialization (frame bytes / link bandwidth) + switch latency per
+  traversed link + window-quantized waiting time, summarized per flush
+  window as a histogram and p50/p99/max (``WindowStats.latency``).
+"""
+from __future__ import annotations
+
+from repro.wire.codec import (DEFAULT_WORD, WireWordFormat, decode_planar,
+                              decode_words, encode_planar, encode_words)
+from repro.wire.framing import (WireFormat, frame_bytes, frame_count,
+                                frame_overhead_bytes, wire_efficiency)
+from repro.wire.latency import (LATENCY_BIN_EDGES_US, LatencySummary,
+                                hop_latency_us, summarize_latency,
+                                zero_latency_summary)
+from repro.wire.profiles import ETHERNET, EXTOLL, PROFILES, get_profile
+
+__all__ = [
+    "DEFAULT_WORD", "WireWordFormat", "encode_words", "decode_words",
+    "encode_planar", "decode_planar",
+    "WireFormat", "frame_bytes", "frame_count", "frame_overhead_bytes",
+    "wire_efficiency",
+    "LATENCY_BIN_EDGES_US", "LatencySummary", "hop_latency_us",
+    "summarize_latency", "zero_latency_summary",
+    "EXTOLL", "ETHERNET", "PROFILES", "get_profile",
+]

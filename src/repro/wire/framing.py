@@ -1,0 +1,107 @@
+"""Frame-level byte accounting — what a bucket row costs on a real link.
+
+A flush window hands the transport one bucket row per destination; on the
+wire that row is a stream of *frames* of a concrete protocol.  This module
+makes the per-frame overhead exact instead of the payload-only estimate
+the transports used before:
+
+* payload per frame is capped at ``mtu_payload`` bytes and padded up to a
+  multiple of ``cell_bytes`` (Extoll's network layer moves 64-byte cells;
+  Ethernet is byte-granular but enforces a 64-byte minimum frame);
+* every frame pays ``header_bytes + crc_bytes`` protocol overhead, is
+  clamped to ``min_frame_bytes`` on the wire, and is followed by
+  ``gap_bytes`` of mandatory line idle (Ethernet preamble + inter-frame
+  gap; zero for Extoll cells);
+* ``bytes_per_us`` (serialization bandwidth) and ``switch_latency_us``
+  (per-hop forwarding delay) are the link-timing half of the profile,
+  consumed by :mod:`repro.wire.latency`.
+
+All accounting functions are pure int32 jnp math — jit-safe, shape
+polymorphic over per-destination event counts, and property-tested against
+an independent scalar Python oracle (``tests/test_wire.py``):
+``frames * cell_size >= payload`` and
+``overhead == frames * (header + crc [+ gap, + min-frame pad])`` hold for
+every count and profile.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class WireFormat(NamedTuple):
+    """One wire protocol profile (framing geometry + link timing)."""
+
+    name: str
+    mtu_payload: int          # max payload bytes per frame (multiple of word)
+    cell_bytes: int           # frame payload padded up to this granularity
+    header_bytes: int         # per-frame protocol header
+    crc_bytes: int            # per-frame checksum
+    min_frame_bytes: int      # minimum header+payload+crc on the wire
+    gap_bytes: int            # preamble + inter-frame gap per frame
+    bytes_per_us: float       # link serialization bandwidth
+    switch_latency_us: float  # per-hop switch/forwarding latency
+    word_bytes: int = 8       # one encoded spike event (64-bit wire word)
+
+    @property
+    def events_per_frame(self) -> int:
+        return self.mtu_payload // self.word_bytes
+
+    def validate(self) -> "WireFormat":
+        if self.mtu_payload % self.word_bytes:
+            raise ValueError(
+                f"{self.name}: mtu_payload {self.mtu_payload} must be a "
+                f"multiple of word_bytes {self.word_bytes} (events never "
+                f"straddle frames)")
+        if min(self.mtu_payload, self.cell_bytes, self.word_bytes) <= 0:
+            raise ValueError(f"{self.name}: non-positive geometry: {self}")
+        if self.bytes_per_us <= 0 or self.switch_latency_us < 0:
+            raise ValueError(f"{self.name}: bad link timing: {self}")
+        return self
+
+
+def _frame_wire_bytes(fmt: WireFormat, payload_bytes: jax.Array) -> jax.Array:
+    """On-wire cost of ONE frame carrying ``payload_bytes`` of payload."""
+    p = jnp.asarray(payload_bytes, jnp.int32)
+    cells = -(-p // fmt.cell_bytes) * fmt.cell_bytes
+    frame = jnp.maximum(cells + fmt.header_bytes + fmt.crc_bytes,
+                        fmt.min_frame_bytes)
+    return frame + fmt.gap_bytes
+
+
+def frame_count(fmt: WireFormat, n_events) -> jax.Array:
+    """Frames needed for ``n_events`` events (0 events -> 0 frames)."""
+    n = jnp.asarray(n_events, jnp.int32)
+    return -(-n // fmt.events_per_frame)
+
+
+def frame_bytes(fmt: WireFormat, n_events) -> jax.Array:
+    """Exact on-wire bytes for ``n_events`` events (headers, CRC, cell
+    padding, min-frame clamp and inter-frame gaps included)."""
+    n = jnp.asarray(n_events, jnp.int32)
+    epf = fmt.events_per_frame
+    full = n // epf
+    rem = n % epf
+    total = full * _frame_wire_bytes(fmt, jnp.int32(fmt.mtu_payload))
+    total = total + jnp.where(
+        rem > 0, _frame_wire_bytes(fmt, rem * fmt.word_bytes), 0)
+    return total.astype(jnp.int32)
+
+
+def frame_overhead_bytes(fmt: WireFormat, n_events) -> jax.Array:
+    """Non-payload bytes: :func:`frame_bytes` minus the raw event payload."""
+    n = jnp.asarray(n_events, jnp.int32)
+    return frame_bytes(fmt, n) - n * fmt.word_bytes
+
+
+def wire_efficiency(fmt: WireFormat, n_events) -> jax.Array:
+    """Payload fraction of the on-wire bytes (the paper's protocol-tax
+    curve: ~1 for a full Extoll cell train, far lower for a lone event in
+    a minimum-size Ethernet frame)."""
+    n = jnp.asarray(n_events, jnp.int32)
+    total = frame_bytes(fmt, n)
+    return jnp.where(total > 0,
+                     (n * fmt.word_bytes) / jnp.maximum(total, 1),
+                     0.0).astype(jnp.float32)

@@ -1,0 +1,103 @@
+"""Per-event latency model — when does a pulse actually arrive?
+
+The quantity the follow-up papers measure (pulse latency distributions
+between chips) decomposes, for a store-and-forward fabric, into exactly
+three charges per delivered event:
+
+1. **waiting time** — systemtime spent parked before the transport
+   admitted the event's bucket row: the tail of its flush window, plus
+   one full window per credit-stall re-offer and per residue round-trip.
+   The simulator derives this from the *injection timestamp* each event
+   carries in its wire word's meta lane (:mod:`repro.wire.codec`), so
+   deferred rows accumulate waiting time across re-offers with no extra
+   bookkeeping.
+2. **serialization** — ``frame_bytes(row) / bytes_per_us`` per traversed
+   link: a store-and-forward hop cannot cut a frame through, it re-clocks
+   the whole frame onto the next link.
+3. **switch latency** — ``switch_latency_us`` per traversed link.
+
+Charges 2+3 are per *row* (all events of a bucket row share one frame
+train and one route), so the per-window summary works on row-granular
+latencies weighted by row event counts.  The summary is a fixed-bin
+log-spaced histogram plus weighted p50/p99/max/mean — jit-safe, scan-able
+(``WindowStats.latency``), and cheap: one sort over the per-source rows
+of a window.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.wire.framing import WireFormat, frame_bytes
+
+# Log-spaced bin edges in microseconds: 16 bins covering 0.25 us (an
+# uncontended Extoll hop) to > 4 ms (a congested GbE path); bin b holds
+# latencies in [edge[b-1], edge[b]), open-ended at both ends.
+LATENCY_BIN_EDGES_US = tuple(float(2.0 ** e) for e in range(-2, 13))
+N_LATENCY_BINS = len(LATENCY_BIN_EDGES_US) + 1
+
+
+class LatencySummary(NamedTuple):
+    """Per-window event-latency digest (all scalars f32, hist i32)."""
+
+    p50_us: jax.Array          # () weighted median
+    p99_us: jax.Array          # () weighted 99th percentile
+    max_us: jax.Array          # () slowest delivered event
+    mean_us: jax.Array         # () weighted mean
+    hist: jax.Array            # (N_LATENCY_BINS,) events per latency bin
+
+
+def zero_latency_summary() -> LatencySummary:
+    z = jnp.zeros((), jnp.float32)
+    return LatencySummary(z, z, z, z,
+                          jnp.zeros((N_LATENCY_BINS,), jnp.int32))
+
+
+def hop_latency_us(fmt: WireFormat, counts, hops) -> jax.Array:
+    """Wire-time of a bucket row: per traversed link, one switch plus one
+    full re-serialization of the row's frame train (store-and-forward).
+
+    counts/hops broadcast together; returns f32 microseconds.
+    """
+    counts = jnp.asarray(counts, jnp.int32)
+    hops = jnp.asarray(hops, jnp.int32)
+    ser = frame_bytes(fmt, counts).astype(jnp.float32) / fmt.bytes_per_us
+    return hops.astype(jnp.float32) * (fmt.switch_latency_us + ser)
+
+
+def summarize_latency(lat_us: jax.Array, weights: jax.Array) -> LatencySummary:
+    """Weighted digest of per-row (or per-event) latencies.
+
+    ``weights`` are event counts (0 rows are ignored); an all-zero weight
+    vector yields the zero summary.  Percentile semantics: the smallest
+    latency whose cumulative event weight reaches ``ceil(q * total)`` —
+    the value an exact sorted-event percentile would return.
+    """
+    lat = lat_us.reshape(-1).astype(jnp.float32)
+    w = weights.reshape(-1).astype(jnp.int32)
+    total = jnp.sum(w)
+    order = jnp.argsort(lat)
+    lat_s = lat[order]
+    cw = jnp.cumsum(w[order])
+
+    def pct(q: float):
+        thresh = jnp.ceil(q * total).astype(cw.dtype)
+        idx = jnp.argmax(cw >= jnp.maximum(thresh, 1))
+        return jnp.where(total > 0, lat_s[idx], 0.0).astype(jnp.float32)
+
+    edges = jnp.asarray(LATENCY_BIN_EDGES_US, jnp.float32)
+    bins = jnp.searchsorted(edges, lat, side="right")
+    hist = jnp.zeros((N_LATENCY_BINS,), jnp.int32).at[bins].add(w)
+    return LatencySummary(
+        p50_us=pct(0.5),
+        p99_us=pct(0.99),
+        max_us=jnp.max(jnp.where(w > 0, lat, 0.0)).astype(jnp.float32),
+        mean_us=jnp.where(
+            total > 0,
+            jnp.sum(lat * w.astype(jnp.float32)) / jnp.maximum(total, 1),
+            0.0).astype(jnp.float32),
+        hist=hist,
+    )

@@ -4,4 +4,8 @@ import sys
 sys.path.insert(0, os.path.dirname(__file__))          # prop / md_helper
 
 def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: multi-device subprocess tests")
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-device subprocess tests and the aggregate_sort "
+        "argsort cross-check oracles (CI fast tier runs -m 'not slow'; "
+        "a plain local `python -m pytest` still runs everything)")

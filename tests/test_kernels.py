@@ -13,6 +13,12 @@ from repro.snn.lif import LIFParams, init_state
 from prop import draw, given
 
 
+# The aggregate_sort (jnp.argsort) oracle is ~10x slower than the
+# multi-operand lax.sort hot path on CPU (see ROADMAP); tests that use it
+# as the cross-check are marked slow — CI's fast tier runs -m "not slow",
+# the slow tier and any plain local `python -m pytest` still run them.
+
+@pytest.mark.slow
 @pytest.mark.parametrize("n,d,c", [
     (16, 3, 4), (64, 7, 5), (256, 16, 32), (1024, 64, 16),
     (128, 3, 124), (512, 8, 128), (100, 13, 7),
@@ -37,6 +43,7 @@ def test_bucket_scatter_matches_refs(n, d, c):
     assert (got.data == rd).all()
 
 
+@pytest.mark.slow
 @given(n_cases=10, n=draw.ints(1, 400), d=draw.ints(1, 40),
        c=draw.ints(1, 64), seed=draw.ints(0, 9999))
 def test_bucket_scatter_prop(n, d, c, seed):
@@ -165,6 +172,7 @@ def test_fused_route_aggregate_matches_ref():
             assert (fw.buckets.counts == jnp.minimum(rc, c)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n,d,c", [
     (1000, 7, 33),          # the ROADMAP-named ragged case
     (257, 13, 19),

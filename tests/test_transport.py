@@ -269,6 +269,16 @@ for s in (st, s3):
     assert s.link.credit_stalls.sum() == 0
     assert (s.link.hops > 0)[:, 1:].all()
 assert sa.deadline_miss.sum() == 0
+# wire-latency digest rides WindowStats for every backend: the histogram
+# accounts exactly the delivered events, and the torus' multi-hop routes
+# can only slow the median relative to the single-hop crossbar
+for s in (sa, st, s3):
+    assert (s.latency.hist.sum(-1) == s.link.delivered_events).all()
+    assert (s.latency.p50_us[:, 1:] > 0).all()
+    assert (s.latency.max_us >= s.latency.p99_us).all()
+    assert (s.latency.p99_us >= s.latency.p50_us).all()
+for s in (st, s3):
+    assert (s.latency.p50_us >= sa.latency.p50_us).all()
 
 # 2. tiny credits: back-pressure engages; the deferral chain balances
 # (link_credits must stay >= capacity -- the admission invariant)
@@ -292,6 +302,10 @@ for transport, kw in [("torus2d", {}),
     assert (fresh >= 0).all()
     # aggregation-level identity still balances on every row
     assert (sc.offered == sc.events_sent + sc.deferred + sc.overflow).all()
+    # latency digest stays exact under congestion: every delivered event
+    # lands in the histogram (deferred events are counted on the window
+    # that finally delivers them, waiting included)
+    assert (sc.latency.hist.sum(-1) == sc.link.delivered_events).all()
 print("SIM_TORUS_OK")
 """, n_devices=4)
     assert "SIM_TORUS_OK" in out

@@ -13,12 +13,18 @@ of silently rotting:
 * every other command runs exactly as written.
 
 It also cross-checks that the README documents exactly the transport
-backends the code registers (``repro.transport.BACKENDS``).
+backends the code registers (``repro.transport.BACKENDS``) and every
+wire protocol profile (``repro.wire.PROFILES``), and that the committed
+``BENCH_*.json`` artifacts are full-shape runs: ``--smoke`` stamps its
+rows ``"smoke": true`` (and older smoke artifacts are recognizable by
+their shrunken shapes), and committing one would silently replace the
+repo's perf trajectory with toy numbers.
 
 Usage: python tools/check_docs.py   (no arguments; exits non-zero on drift)
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import re
 import subprocess
@@ -29,6 +35,28 @@ DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 TIMEOUT_S = 1800
 
 FENCE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+
+def check_bench_artifacts() -> None:
+    """Committed BENCH_*.json must be full-shape: reject any row stamped
+    ``"smoke": true`` (Reporter does this for every --smoke row) and, as
+    a belt for artifacts from before the flag, the shape fingerprints
+    only a smoke run produces (transport/wire shrink to N=512 C=64;
+    bench_kernels shrinks lif_step_ref to N4096 from N65536)."""
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        rows = json.loads(path.read_text())
+        for row in rows:
+            where = f"{path.name}: row op={row.get('op')!r}"
+            if row.get("smoke"):
+                sys.exit(f"SMOKE ARTIFACT: {where} is from a --smoke run; "
+                         f"refresh with a full `python -m benchmarks.run` "
+                         f"before committing")
+            shape = str(row.get("shape", ""))
+            if "N=512 C=64" in shape:
+                sys.exit(f"SMOKE ARTIFACT: {where} has smoke shape "
+                         f"{shape!r}; refresh with a full run")
+            if row.get("op") == "lif_step_ref" and shape == "N4096":
+                sys.exit(f"SMOKE ARTIFACT: {where} is the smoke-sized "
+                         f"lif_step_ref row; refresh with a full run")
 
 
 def bash_blocks(path: pathlib.Path):
@@ -58,15 +86,20 @@ def run_cmd(cmd: str) -> None:
 
 def check_backends() -> None:
     sys.path.insert(0, str(ROOT / "src"))
-    from repro import transport
+    from repro import transport, wire
     text = (ROOT / "README.md").read_text()
     for name in transport.BACKENDS:
         if f"`{name}`" not in text:
             sys.exit(f"DOCS DRIFT: backend {name!r} (repro.transport."
                      f"BACKENDS) is not documented in README.md")
+    for name in wire.PROFILES:
+        if f"`{name}`" not in text:
+            sys.exit(f"DOCS DRIFT: wire profile {name!r} (repro.wire."
+                     f"PROFILES) is not documented in README.md")
 
 
 def main() -> None:
+    check_bench_artifacts()
     n = 0
     for path in DOC_FILES:
         for cmds in bash_blocks(path):
@@ -75,7 +108,12 @@ def main() -> None:
                 run_cmd(cmd)
                 n += 1
     check_backends()
-    print(f"docs OK: {n} commands executed, backend list in sync")
+    # again AFTER executing the doc blocks: a quickstart command that
+    # writes smoke artifacts into the repo root must fail here, not
+    # silently clobber the committed full-shape numbers
+    check_bench_artifacts()
+    print(f"docs OK: {n} commands executed, backend + wire-profile lists "
+          f"in sync, committed BENCH artifacts full-shape")
 
 
 if __name__ == "__main__":
