@@ -1,0 +1,43 @@
+"""Shared congestion-study harness for the benchmark subprocess scripts.
+
+``STUDY_SNIPPET`` is spliced into the ``-c`` SCRIPT strings of
+``bench_transport.py`` and ``bench_wire.py`` (both subprocesses define
+``mesh``, ``words``, ``stacked``, ``n_shards``, ``C`` and ``params``
+before it runs).  It builds ``make_study(backend, opts)`` — a jitted
+shard_map whose ``lax.scan`` threads the transport's ``FabricState``
+across ``N_WIN`` sustained windows of the same offered load, so parked
+rows resume mid-route and the congestion terms of the latency model are
+actually measured.  Keeping the harness in one place means the two BENCH
+files can never diverge on the study methodology.
+"""
+
+STUDY_SNIPPET = r'''
+from jax.sharding import PartitionSpec as _StudyP
+from jax.experimental.shard_map import shard_map as _study_shard_map
+from repro import transport as _study_tp
+from repro.core.exchange import exchange_window as _study_xw
+from repro.core.routing import RoutingTables as _StudyRT
+
+N_WIN = params["windows"]
+
+def make_study(backend, opts):
+    """Jitted multi-window exchange scan -> (LinkStats, LatencySummary)
+    stacked (n_shards, N_WIN, ...); stats summed over windows by callers."""
+    tb = _study_tp.create(backend, n_shards=n_shards, max_row_events=C,
+                          **opts)
+    def body(w, d, g, m):
+        tables = _StudyRT(d[0], g[0], m[0])
+        def win(lstate, _):
+            out = _study_xw(w[0], tables, axis_name="wafer",
+                            n_shards=n_shards, capacity=C,
+                            transport=tb, link_state=lstate)
+            return out.link_state, (out.link, out.latency)
+        _, stats = jax.lax.scan(win, tb.init_state(2 * C), None,
+                                length=N_WIN)
+        return jax.tree_util.tree_map(lambda x: x[None], stats)
+    spec = _StudyP("wafer")
+    fn = _study_shard_map(body, mesh=mesh, in_specs=(spec,) * 4,
+                          out_specs=spec, check_rep=False)
+    return jax.jit(lambda: fn(words, stacked.dest_of_addr,
+                              stacked.guid_of_addr, stacked.mcast_of_guid))
+'''

@@ -4,9 +4,13 @@
 One exchange window (fused route+aggregate + ship + multicast) per
 backend on 8 shards — crossbar, (2, 4) 2-D torus and (2, 2, 2) 3-D torus
 — plus credit-throttled torus variants so the hop-by-hop stall path is
-exercised.  Needs 8 devices, so the timed work runs in a subprocess with
-``xla_force_host_platform_device_count=8`` (the harness process has
-already initialized single-device jax); results feed
+exercised, plus a multi-window congestion study (FabricState threaded
+across a scan of sustained windows) so the in-fabric transit buffers
+show rows parking mid-route AND resuming: the study row carries
+``parked`` / ``unparked`` / ``hop0_reentries`` / ``dwell_us`` /
+``latency_p99_us``.  Needs 8 devices, so the timed work runs in a
+subprocess with ``xla_force_host_platform_device_count=8`` (the harness
+process has already initialized single-device jax); results feed
 ``BENCH_transport.json`` with backend, mesh shape, median_ms,
 events_per_s and credit_stalls per row (see docs/benchmarks.md for the
 full schema).
@@ -17,6 +21,8 @@ import json
 import os
 import subprocess
 import sys
+
+from benchmarks._fabric_study import STUDY_SNIPPET
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -87,6 +93,43 @@ for backend, opts, tag, meshname in cases:
         "hops": int(np.asarray(out.link.hops)[0]),
         "forwarded_bytes": int(np.asarray(out.link.forwarded_bytes).sum()),
         "stalled_by_hop": [int(v) for v in sbh],
+        "parked": int(np.asarray(out.link.parked_events).sum()),
+        "dwell_us": round(
+            float(np.asarray(out.link.queue_dwell_us).sum()), 3),
+    })
+
+# congestion study: thread the FabricState across a scan of sustained
+# windows so parked rows actually RESUME mid-route (a one-shot window can
+# park but never unpark); stats are summed over windows, timing is the
+# whole scan divided by n_windows
+''' + STUDY_SNIPPET + r'''
+
+for backend, opts, meshname in [
+        ("torus3d", {"nx": n3[0], "ny": n3[1], "nz": n3[2],
+                     "link_credits": cr}, "%dx%dx%d" % n3)]:
+    run = make_study(backend, opts)
+    link, lat = run()
+    med = median_ms(run)
+    link = jax.tree_util.tree_map(np.asarray, link)
+    sent = int(link.sent_events.sum() + link.unparked_events.sum())
+    sbh = link.stalled_by_hop.sum((0, 1))
+    rows.append({
+        "backend": backend + "+credits*%dwin" % N_WIN,
+        "mesh": meshname,
+        "shape": "S=8 N={} C={} W={}".format(N, C, N_WIN),
+        "median_ms": med / N_WIN,
+        "events_per_s": sent / (med * 1e-3) if med > 0 else 0.0,
+        "credit_stalls": int(link.credit_stalls.sum()),
+        "hops": int(link.hops[0].sum()),
+        "forwarded_bytes": int(link.forwarded_bytes.sum()),
+        "stalled_by_hop": [int(v) for v in sbh],
+        "parked": int(link.parked_events.sum()),
+        "unparked": int(link.unparked_events.sum()),
+        "hop0_reentries": int(link.deferred_events.sum()),
+        "dwell_us": round(float(link.queue_dwell_us.sum()), 3),
+        # worst delivering window: late saturated windows may deliver
+        # nothing at all (empty digest), so take the max over windows
+        "latency_p99_us": round(float(np.asarray(lat.p99_us).max()), 3),
     })
 print("BENCH_JSON " + json.dumps(rows))
 '''
@@ -97,6 +140,7 @@ def main(report) -> None:
         "n": 512 if report.smoke else 4096,
         "c": 64 if report.smoke else 256,
         "iters": 5 if report.smoke else 15,
+        "windows": 4 if report.smoke else 6,
     }
     # throttle to roughly half the typical per-link demand so stalls
     # occur, but never below the bucket capacity (admission invariant)
@@ -105,22 +149,19 @@ def main(report) -> None:
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT, json.dumps(params)],
-        capture_output=True, text=True, timeout=900, env=env)
+        capture_output=True, text=True, timeout=1200, env=env)
     if out.returncode != 0:
         raise RuntimeError(
             f"bench_transport subprocess failed:\n{out.stdout}\n{out.stderr}")
     line = [l for l in out.stdout.splitlines()
             if l.startswith("BENCH_JSON ")][0]
     for row in json.loads(line[len("BENCH_JSON "):]):
+        extra = {k: row[k] for k in (
+            "backend", "mesh", "credit_stalls", "hops", "forwarded_bytes",
+            "stalled_by_hop", "parked", "dwell_us", "unparked",
+            "hop0_reentries", "latency_p99_us") if k in row}
         report.bench(
             "transport", row["backend"], f"mesh={row['mesh']} {row['shape']}",
             row["median_ms"], row["events_per_s"],
-            notes=f"stalls={row['credit_stalls']}",
-            extra={
-                "backend": row["backend"],
-                "mesh": row["mesh"],
-                "credit_stalls": row["credit_stalls"],
-                "hops": row["hops"],
-                "forwarded_bytes": row["forwarded_bytes"],
-                "stalled_by_hop": row["stalled_by_hop"],
-            })
+            notes=f"stalls={row['credit_stalls']} parked={row['parked']}",
+            extra=extra)

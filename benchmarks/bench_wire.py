@@ -13,7 +13,11 @@ profile must show strictly higher wire efficiency and lower latency on
 every backend.
 
 A codec microbenchmark row (pack+unpack round-trip wall-clock) rides
-along, since the codec is new hot-path work the exchange now pays.
+along, since the codec is new hot-path work the exchange now pays, and
+a congested ``torus3d+credits`` multi-window row (FabricState threaded
+through a ``lax.scan``) measures the latency model's congestion terms:
+its p99 must sit strictly above the uncongested torus3d row's while the
+uncongested p50 is untouched.
 """
 from __future__ import annotations
 
@@ -21,6 +25,8 @@ import json
 import os
 import subprocess
 import sys
+
+from benchmarks._fabric_study import STUDY_SNIPPET
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -110,6 +116,37 @@ for backend, opts, meshdims, meshname in cases:
                 float(np.asarray(out.latency.max_us).max()), 3),
         })
 
+# congestion row: torus3d under sustained credit-throttled windows (the
+# FabricState threads a lax.scan), extoll profile — parked rows resume
+# mid-route and the queueing term pushes p99 up while the uncongested
+# p50 above stays at the serialization-only charge
+''' + STUDY_SNIPPET + r'''
+cr = max(N // 8, C)
+run_c = make_study("torus3d", {"nx": n3[0], "ny": n3[1], "nz": n3[2],
+                               "link_credits": cr,
+                               "wire_format": "extoll"})
+link, lat = run_c()
+med = median_ms(run_c)
+link = jax.tree_util.tree_map(np.asarray, link)
+sent = int(link.sent_events.sum() + link.unparked_events.sum())
+rows.append({
+    "backend": "torus3d+credits*%dwin" % N_WIN,
+    "wire_format": "extoll",
+    "mesh": "%dx%dx%d" % n3,
+    "shape": "S=8 N={} C={} W={}".format(N, C, N_WIN),
+    "median_ms": med / N_WIN,
+    "events_per_s": sent / (med * 1e-3) if med > 0 else 0.0,
+    "bytes_on_wire": int(link.bytes_on_wire.sum()),
+    "parked": int(link.parked_events.sum()),
+    "unparked": int(link.unparked_events.sum()),
+    "dwell_us": round(float(link.queue_dwell_us.sum()), 3),
+    # worst delivering window: late saturated windows may deliver nothing
+    # at all (empty digest), so take the max over windows
+    "latency_p50_us": round(float(np.asarray(lat.p50_us).max()), 3),
+    "latency_p99_us": round(float(np.asarray(lat.p99_us).max()), 3),
+    "latency_max_us": round(float(np.asarray(lat.max_us).max()), 3),
+})
+
 # codec microbenchmark: pack+unpack round trip at window scale
 meta = jnp.arange(n_shards * N, dtype=jnp.int32).reshape(n_shards, N)
 rt_fn = jax.jit(lambda w, m: wire.decode_planar(wire.encode_planar(w, m)))
@@ -128,6 +165,7 @@ def main(report) -> None:
         "n": 512 if report.smoke else 4096,
         "c": 64 if report.smoke else 256,
         "iters": 5 if report.smoke else 15,
+        "windows": 4 if report.smoke else 6,
     }
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

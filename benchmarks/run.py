@@ -13,7 +13,10 @@ the tier-1 time budget while still producing all four JSON files.  Smoke
 rows are stamped ``"smoke": true`` and must NEVER be committed: the
 committed ``BENCH_*.json`` are full-shape numbers, and
 ``tools/check_docs.py`` fails CI if a smoke-stamped (or known
-smoke-shaped) artifact lands in the repo root.
+smoke-shaped) artifact lands in the repo root.  As a second belt,
+``--smoke`` defaults ``--out-dir`` to ``/tmp/bench`` — a smoke run
+executed from the repo root can no longer clobber the committed
+artifacts unless the caller explicitly points it there.
 
 Modules:
   bench_aggregation  paper §3.1 throughput claims (the central table)
@@ -113,9 +116,14 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="fast reduced run (tier-1 time budget)")
-    ap.add_argument("--out-dir", default=".",
-                    help="directory for BENCH_<group>.json files")
+    ap.add_argument("--out-dir", default=None,
+                    help="directory for BENCH_<group>.json files "
+                         "(default: repo root for full runs, /tmp/bench "
+                         "for --smoke so toy numbers can never clobber "
+                         "the committed full-shape artifacts)")
     args = ap.parse_args()
+    if args.out_dir is None:
+        args.out_dir = "/tmp/bench" if args.smoke else "."
 
     report = Reporter(smoke=args.smoke)
     modules = SMOKE_MODULES if args.smoke else MODULES

@@ -77,8 +77,10 @@ class ExchangeOut(NamedTuple):
                              #   WireFormat profile)
     link_state: tp.LinkState  # advanced credit state (thread across windows)
     latency: wire.LatencySummary  # wire-latency digest of this shard's
-                             #   ADMITTED off-shard rows: per traversed
-                             #   link, switch latency + frame serialization
+                             #   off-shard rows DELIVERED this window: per
+                             #   traversed link, switch latency + frame
+                             #   serialization, plus the queueing dwell
+                             #   behind parked in-fabric traffic
                              #   (repro.wire.latency; no waiting term — a
                              #   one-shot window has none)
 
@@ -123,9 +125,9 @@ def exchange_window(
     if transport is None:
         transport = tp.create("alltoall", n_shards=n_shards,
                               wire_format=wire_format)
-    if link_state is None:
-        link_state = transport.init_state()
     payload = wire.encode_planar(b.data, b.guids)
+    if link_state is None:
+        link_state = transport.init_state(payload.shape[-1])
     out = transport.exchange(link_state, payload, b.counts,
                              axis_name=axis_name)
     recv_events, recv_guids = wire.decode_planar(out.recv_payload)
@@ -143,14 +145,22 @@ def exchange_window(
     bits = (masks[None, :] >> jnp.arange(n_links, dtype=jnp.uint32)[:, None]) & 1
     link_events = jnp.where(bits.astype(bool), flat_ev[None, :], ev.INVALID_EVENT)
 
-    # per-event wire latency of the rows THIS shard admitted: every
+    # per-event wire latency of the rows THIS shard delivered: every
     # traversed link charges switch latency + one re-serialization of the
-    # row's frame train (store-and-forward); local rows never hit a link
+    # row's frame train (store-and-forward), plus the queueing dwell
+    # behind traffic parked along the route and — for rows the fabric
+    # delivers from its transit buffers — the park dwell accumulated
+    # while waiting there (repro.wire.latency's congestion terms; both
+    # exactly zero on an uncontended fabric).  Rows parked mid-route this
+    # window are excluded (``sent_now``) — their latency is charged by
+    # the window that finally delivers them, custody counts and all.
     my = jax.lax.axis_index(axis_name)
     hops_row = transport.route_hops()[my]
-    lat_us = wire.hop_latency_us(transport.wire_fmt, b.counts, hops_row)
-    lat_w = jnp.where((jnp.arange(n_shards) != my) & out.sent_mask,
-                      b.counts, 0)
+    c_row = jnp.where(out.unparked_now > 0, out.unparked_now, b.counts)
+    lat_us = (wire.hop_latency_us(transport.wire_fmt, c_row, hops_row)
+              + out.queue_us[my] + out.park_wait_us[my])
+    lat_w = (jnp.where((jnp.arange(n_shards) != my) & out.sent_now,
+                       b.counts, 0) + out.unparked_now)
     latency = wire.summarize_latency(lat_us, lat_w)
 
     return ExchangeOut(

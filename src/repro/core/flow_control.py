@@ -152,21 +152,35 @@ def init_credits(n_links: int, limit: int, notify_latency: int) -> CreditBank:
     )
 
 
-def credit_tick(bank: CreditBank, spent: jax.Array) -> CreditBank:
+def credit_tick(bank: CreditBank, spent: jax.Array,
+                notify: jax.Array | None = None) -> CreditBank:
     """One window: spend ``spent`` (K,) units and advance the delay lines.
 
     The consumer's notification for this window's data is enqueued at the
     tail and returns as producer credit ``notify_latency`` windows later —
     the same producer/consumer/tick cycle as ``RingState``, batched to one
     call per flush window.  Callers must ensure ``spent <= credits``.
-    Invariant: ``credits + pending.sum()`` is unchanged by this call.
+
+    ``notify`` (default: ``spent``) is the amount entering the
+    notification delay line this window.  The two differ only for callers
+    that model in-fabric transit buffers (``repro.transport.torus``): a
+    unit spent by a row that then *parks* in the downstream buffer is
+    HELD — subtracted from credits but not notified until the row departs
+    — and a departing parked row *releases* its held unit into the delay
+    line without a fresh spend.  So ``notify = spent - newly_held +
+    released`` and the conservation identity becomes ``credits +
+    pending.sum() + held == limit`` with ``held`` tracked by the caller
+    (``FabricState.parked_by_link``); with no holds it degenerates to the
+    original ``credits + pending.sum() == limit``.
     """
     spent = spent.astype(jnp.int32)
+    notify = spent if notify is None else notify.astype(jnp.int32)
     epoch = bank.epoch + (jnp.sum(spent) > 0).astype(jnp.int32)
     if bank.pending.shape[-1] == 0:      # notify_latency == 0: refund now
-        return bank._replace(epoch=epoch)
+        return bank._replace(credits=bank.credits - spent + notify,
+                             epoch=epoch)
     arrived = bank.pending[:, 0]
-    pending = jnp.roll(bank.pending, -1, axis=1).at[:, -1].set(spent)
+    pending = jnp.roll(bank.pending, -1, axis=1).at[:, -1].set(notify)
     credits = bank.credits - spent + arrived
     return CreditBank(credits=credits, pending=pending, epoch=epoch)
 

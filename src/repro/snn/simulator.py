@@ -19,9 +19,12 @@ backend's link flow-control state.  Iteration k:
      ``repro.transport``) and scatter their weighted input
      into the delay ring; this happens at the same systemtime as the
      unpipelined formulation (the start of window k == the end of window
-     k-1), so deadline semantics are unchanged.  Bucket rows refused by a
-     congested egress link are *deferred*: their events re-enter this
-     window's aggregation ahead of everything else,
+     k-1), so deadline semantics are unchanged.  Bucket rows refused at
+     their source egress link are *deferred*: their events re-enter this
+     window's aggregation ahead of everything else.  Rows refused at a
+     TRANSIT link park in the fabric's transit buffers (``FabricState``)
+     and resume from their current hop in a later window — the fabric,
+     not the caller, keeps custody of their wire words,
   2. ``lax.scan`` the LIF dynamics ``window`` steps off the ring,
   3. compact spikes into packed events, append the transport-deferred
      events and the residue deferred from window k-1 (the FPGA's
@@ -271,26 +274,33 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         )
 
     def init_link() -> tp.LinkState:
-        return backend.init_state()
+        # the wire payload is lane-planar 64-bit words: 2 u32 per bucket
+        # slot (repro.wire.codec) — the width the in-fabric transit
+        # buffers must hold to keep custody of a parked row
+        return backend.init_state(2 * cfg.capacity)
 
     def _exchange(pend: PendingWindow, lstate: tp.LinkState, *,
                   enforce_credits: bool):
         """Ship window k-1's buckets through the transport backend.
 
         Each (event, injection-step) pair travels as one 64-bit wire word
-        (``repro.wire.codec``), lane-planar in the u32 payload.
+        (``repro.wire.codec``), lane-planar in the u32 payload.  The last
+        tuple element is the queueing-dwell column of the rows delivered
+        to this shard (the congestion term of the latency model).
         """
         if axis_name is None:
             full = jnp.ones((cfg.n_shards,), bool)
             return (pend.data, pend.meta, pend.counts, full,
-                    tp.zero_link_stats(), lstate)
+                    tp.zero_link_stats(), lstate,
+                    jnp.zeros((cfg.n_shards,), jnp.float32))
         payload = wire.encode_planar(pend.data, pend.meta)
         out = backend.exchange(lstate, payload, pend.counts,
                                axis_name=axis_name,
                                enforce_credits=enforce_credits)
         recv_events, recv_meta = wire.decode_planar(out.recv_payload)
+        me = jax.lax.axis_index(axis_name)
         return (recv_events, recv_meta, out.recv_counts, out.sent_mask,
-                out.stats, out.state)
+                out.stats, out.state, out.queue_us[:, me])
 
     def _decode(state: ShardState, recv, counts, w_exc, w_inh):
         src_shard = jnp.arange(cfg.n_shards)
@@ -299,17 +309,20 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
 
     fmt = backend.wire_fmt
 
-    def _window_latency(state: ShardState, recv_meta, counts):
+    def _window_latency(state: ShardState, recv_meta, counts, queue_us):
         """Wire latency of the events just delivered: waiting since each
         event's injection step (state.t == the decoded window's end, so
-        deferral and residue rounds accumulate whole windows) + the row's
-        per-link switch + frame-serialization charges."""
+        deferral, residue AND in-fabric park rounds accumulate whole
+        windows) + the row's per-link switch + frame-serialization
+        charges + the queueing dwell behind traffic parked along its
+        route (the congestion term; zero on an uncontended fabric)."""
         me = (jax.lax.axis_index(axis_name) if axis_name is not None
               else jnp.int32(0))
         slot = jnp.arange(cfg.capacity)[None, :]
         live = slot < counts[:, None]
         wait_us = (state.t - recv_meta).astype(jnp.float32) * cfg.step_us
-        hop_us = wire.hop_latency_us(fmt, counts, backend.route_hops()[me])
+        hop_us = (wire.hop_latency_us(fmt, counts, backend.route_hops()[me])
+                  + queue_us)
         lat = jnp.maximum(wait_us, 0.0) + hop_us[:, None]
         return wire.summarize_latency(lat, live.astype(jnp.int32))
 
@@ -319,9 +332,9 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         # 1. exchange + decode window k-1 (same systemtime as unpipelined:
         #    state.t here == that window's end); the route/aggregate below
         #    never reads the collective's result, so the two can overlap.
-        recv, rmeta, counts, sent_mask, lstats, lstate = _exchange(
+        recv, rmeta, counts, sent_mask, lstats, lstate, qcol = _exchange(
             pend, lstate, enforce_credits=True)
-        latency = _window_latency(state, rmeta, counts)
+        latency = _window_latency(state, rmeta, counts, qcol)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         # 2. simulate window k
         t0 = state.t
@@ -376,21 +389,32 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
 
     def drain(state: ShardState, pend: PendingWindow, lstate: tp.LinkState,
               w_exc, w_inh):
-        """Flush the last window's buckets (its decode slot is the step
-        after the scan ends; the final residue stays deferred and is
-        reported via the last window's ``deferred``).  Credits are
-        bypassed — the end-of-run flush quiesces the fabric, so no event
-        is stranded in a stalled bucket.  The drain exchange's LinkStats
-        and latency digest are intentionally discarded: folding them into
-        the last row would
-        break the per-row identities (offered_k == events_sent_{k-1},
-        offered == sent + deferred) that tests pin, so per-run link totals
-        cover the n_windows scanned exchanges only (deadline misses, a
-        pure accumulator with no such identity, ARE folded in)."""
-        recv, _, counts, _, _, _ = _exchange(pend, lstate,
-                                             enforce_credits=False)
+        """Flush the fabric AND the last window's buckets (their decode
+        slot is the step after the scan ends; the final residue stays
+        deferred and is reported via the last window's ``deferred``).
+        The walk order matches event age: first ``drain_fabric`` delivers
+        every row still parked in an in-fabric transit buffer (resuming
+        from its current hop, held credits released), then the final
+        uncredited exchange ships the pending buckets — so no event is
+        stranded mid-route or in a stalled bucket.  The drain exchanges'
+        LinkStats and latency digests are intentionally discarded:
+        folding them into the last row would break the per-row identities
+        (offered_k == events_sent_{k-1}, offered == sent + deferred +
+        parked) that tests pin, so per-run link totals cover the
+        n_windows scanned exchanges only (deadline misses, a pure
+        accumulator with no such identity, ARE folded in)."""
+        miss_total = jnp.zeros((), jnp.int32)
+        if can_defer:       # implies axis_name is not None
+            fab = backend.drain_fabric(lstate, axis_name=axis_name)
+            recv_f, _ = wire.decode_planar(fab.recv_payload)
+            state, miss_f = _decode(state, recv_f, fab.recv_counts,
+                                    w_exc, w_inh)
+            miss_total = miss_total + miss_f.astype(jnp.int32)
+            lstate = fab.state
+        recv, _, counts, _, _, _, _ = _exchange(pend, lstate,
+                                                enforce_credits=False)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
-        return state, miss.astype(jnp.int32)
+        return state, miss_total + miss.astype(jnp.int32)
 
     return init_pending, init_link, body, drain
 

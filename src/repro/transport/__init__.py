@@ -8,8 +8,9 @@ credit-based link flow control (``torus3d`` adds the wafer Z axis).
 """
 from __future__ import annotations
 
-from repro.transport.base import (LinkState, LinkStats, Transport,
-                                  TransportOut, zero_link_stats)
+from repro.transport.base import (FabricState, LinkState, LinkStats,
+                                  Transport, TransportOut,
+                                  init_fabric_state, zero_link_stats)
 
 BACKENDS = ("alltoall", "torus2d", "torus3d")
 

@@ -57,4 +57,8 @@ class AllToAllTransport(base.Transport):
             recv_counts=recv_counts,
             sent_mask=jnp.ones((n,), bool),
             stats=stats,
+            sent_now=jnp.ones((n,), bool),
+            queue_us=jnp.zeros((n, n), jnp.float32),
+            unparked_now=jnp.zeros((n,), jnp.int32),
+            park_wait_us=jnp.zeros((n, n), jnp.float32),
         )

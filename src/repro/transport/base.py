@@ -18,10 +18,13 @@ Backends:
   every window travels via dimension-ordered neighbor ``ppermute`` hops
   (X rings, then Y, then Z — the Z rings are the wafer axis) with
   store-and-forward buffers and hop-by-hop credit-based link flow
-  control.  A route that crosses a congested link — first hop or any
-  transit hop — *defers* the whole bucket row — ``sent_mask`` tells the
-  caller which rows must be re-offered next window through the
-  overflow-residue machinery.
+  control.  A row refused at its SOURCE egress link is *deferred* —
+  ``sent_mask`` tells the caller which rows must be re-offered next
+  window through the overflow-residue machinery; a row refused at a
+  transit link *parks* in the fabric's bounded in-fabric buffers
+  (:class:`FabricState`) and resumes from its current hop in a later
+  window, exactly like a congested Extoll switch holding cells instead
+  of ejecting them to the source NIC.
 
 All backends are pure functions of ``(state, payload, counts)`` so they
 can live inside a jitted ``lax.scan`` carry; ``LinkState`` is the carried
@@ -32,11 +35,14 @@ Credit / notification-delay semantics (§2.1, shared with
 ``repro.core.flow_control`` — the authoritative statement of the
 discipline): each directed egress link of each torus node holds
 ``link_credits`` credits; admitting a bucket row spends the row's event
-count on EVERY link of its dimension-ordered route, and a spent credit
-re-arms only ``notify_latency`` windows later, when the consumer-side
-notification lands.  Credits never exceed their initial limit and
-``credits + pending`` is conserved by every window, so back-pressure —
-not data loss — is the only possible response to sustained overload.
+count on every link of its dimension-ordered route as it crosses it,
+and a spent credit re-arms only ``notify_latency`` windows later, when
+the consumer-side notification lands — unless the row parks in the
+downstream buffer, in which case the arrival link's credit is HELD
+(``FabricState.parked_by_link``) until the row departs.  Credits never
+exceed their initial limit and ``credits + pending + parked_by_link``
+is conserved by every window, so back-pressure — not data loss — is the
+only possible response to sustained overload.
 """
 from __future__ import annotations
 
@@ -49,25 +55,90 @@ from repro.core.flow_control import CreditBank
 from repro.wire import framing as wire_framing
 from repro.wire.profiles import get_profile
 
+
+class FabricState(NamedTuple):
+    """Carried fabric state: credit bank + in-fabric transit buffers.
+
+    The Extoll fabric buffers cells *at each hop*: a congested egress
+    link delays traffic inside the switch, it does not eject it back to
+    the source NIC.  ``FabricState`` models that with a bounded,
+    static-shape occupancy table keyed by (source, destination) bucket
+    row — at most ONE parked row per pair, the per-flow in-order
+    constraint of a real link FIFO:
+
+    * ``parked_count[s, d]`` — events of the (s, d) row currently parked
+      mid-route (0 = no row in fabric for that pair); global, replicated
+      on every shard like the credit bank.
+    * ``parked_hop[s, d]`` — the route hop the row is blocked at: it has
+      traversed hops ``0..h-1`` and waits for credits on hop ``h`` (so
+      ``h >= 1`` whenever ``parked_count > 0`` — a row refused at hop 0
+      never entered the fabric and is *deferred*, not parked).
+    * ``parked_by_link[l]`` — events holding link ``l``'s credits: rows
+      whose last traversed link is ``l`` occupy its downstream
+      store-and-forward buffer, so the credit spent on ``l`` is neither
+      available nor in the notification delay line until the row departs.
+      Per-link boundedness falls out of the credit identity::
+
+          credits + pending.sum(-1) + parked_by_link == limit   (per link)
+
+    * ``parked_payload[d]`` — THIS shard's parked rows' wire words (the
+      only per-shard field: a shard holds payload custody of its own
+      rows; the descriptor tables above are replicated global state so
+      admission stays a deterministic replay on every shard).
+
+    ``alltoall`` and unthrottled torus runs carry zero-size tables; the
+    pytree *structure* stays uniform across backends.
+    """
+
+    bank: CreditBank
+    parked_count: jax.Array     # (n, n) i32 events parked per (src, dst)
+    parked_hop: jax.Array       # (n, n) i32 next hop to traverse (>= 1)
+    parked_age: jax.Array       # (n, n) i32 windows spent parked so far
+                                #   (1 on entry; drives the park-dwell
+                                #   latency charge at delivery)
+    parked_by_link: jax.Array   # (K,) i32 events holding each link's credits
+    parked_payload: jax.Array   # (n, W) u32 my rows' parked wire words
+
+
 # Carried per-link flow-control state.  ``alltoall`` uses a zero-link bank
-# so the pytree structure is uniform across backends.
-LinkState = CreditBank
+# and zero-size transit tables so the pytree structure is uniform across
+# backends.
+LinkState = FabricState
+
+
+def init_fabric_state(bank: CreditBank, n_rows: int = 0,
+                      payload_width: int = 0) -> FabricState:
+    n_links = bank.credits.shape[0]
+    return FabricState(
+        bank=bank,
+        parked_count=jnp.zeros((n_rows, n_rows), jnp.int32),
+        parked_hop=jnp.zeros((n_rows, n_rows), jnp.int32),
+        parked_age=jnp.zeros((n_rows, n_rows), jnp.int32),
+        parked_by_link=jnp.zeros((n_links,), jnp.int32),
+        parked_payload=jnp.zeros((n_rows, payload_width), jnp.uint32),
+    )
 
 
 class LinkStats(NamedTuple):
     """Per-window link-level observability (per shard; scalars are () i32).
 
-    The conservation identity, per shard and window::
+    The conservation identities, per shard and window::
 
-        offered_events == sent_events + deferred_events
+        offered_events == sent_events + deferred_events + parked_events
         deferred_events == stalled_by_hop.sum()
 
-    and globally (summed over the axis) ``sum(sent) == sum(delivered)`` —
-    every admitted event arrives somewhere the same window; deferred events
-    are re-offered by the caller, never silently buffered.  The two array
-    fields are the hop-by-hop breakdowns: which hop of a stalled row's
-    route refused it (hop 0 = the source's own egress link; hop h > 0 = a
-    transit link h neighbor-steps downstream) and the peak
+    and globally (summed over the axis)
+    ``sum(sent) + sum(unparked) == sum(delivered)`` — every event that
+    completes its route arrives the same window; deferred events are
+    re-offered by the caller, parked events sit in the fabric's bounded
+    transit buffers (``FabricState``) and resume from their current hop
+    in a later window (``unparked_events`` counts the window they finally
+    deliver).  Nothing is ever silently dropped: offered events are
+    delivered, deferred, or parked.  The array fields are the hop-by-hop
+    breakdowns: which hop refused each *deferred* row (always hop 0 under
+    the transit-buffer model — a row short of credits on a transit link
+    parks there instead of re-entering at the source), where this shard's
+    *parked* rows currently wait (``parked_by_hop``), and the peak
     store-and-forward occupancy of each dimension-ordered ring phase.
     Their lengths are backend-static (``max_hops`` / ``ndim`` for the
     torus backends, 0 for ``alltoall``).
@@ -90,13 +161,28 @@ class LinkStats(NamedTuple):
                                  #   hop that refused them
     max_in_flight_by_phase: jax.Array  # (ndim,) peak occupancy per ring
                                  #   phase (X, Y, Z)
+    parked_events: jax.Array     # events of my rows NEWLY parked mid-route
+                                 #   this window (custody moved into the
+                                 #   fabric's transit buffers)
+    unparked_events: jax.Array   # events of my parked rows that resumed
+                                 #   and completed delivery this window
+    in_fabric_events: jax.Array  # events of my rows parked at window END
+                                 #   (the fabric occupancy I account for)
+    parked_by_hop: jax.Array     # (max_hops,) my parked events by the
+                                 #   route hop they currently wait at
+                                 #   (window-end occupancy; index >= 1)
+    queue_dwell_us: jax.Array    # () f32 total queueing dwell charged to
+                                 #   my rows delivered this window (the
+                                 #   congestion term of repro.wire.latency)
 
 
 def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:
     z = jnp.zeros((), jnp.int32)
+    zh = jnp.zeros((max_hops,), jnp.int32)
     return LinkStats(z, z, z, z, z, z, z, z, z,
-                     jnp.zeros((max_hops,), jnp.int32),
-                     jnp.zeros((ndim,), jnp.int32))
+                     zh,
+                     jnp.zeros((ndim,), jnp.int32),
+                     z, z, z, zh, jnp.zeros((), jnp.float32))
 
 
 def pack_payload(payload: jax.Array, counts: jax.Array) -> jax.Array:
@@ -116,13 +202,35 @@ def unpack_payload(buf: jax.Array):
 
 
 class TransportOut(NamedTuple):
-    """Result of shipping one window through a transport backend."""
+    """Result of shipping one window through a transport backend.
+
+    ``sent_mask`` is the custody bit: True rows have LEFT the sender —
+    delivered this window or parked in the fabric's transit buffers —
+    and must not be re-offered; False rows stay with the caller (deferred)
+    and re-enter next window's aggregation.  ``sent_now`` narrows that to
+    rows actually delivered this window (the latency digest weights).
+    """
 
     state: LinkState           # advanced flow-control state
     recv_payload: jax.Array    # (n_shards, W) u32 — row s came from shard s
     recv_counts: jax.Array     # (n_shards,) i32 events per received row
     sent_mask: jax.Array       # (n_shards,) bool — False rows were deferred
     stats: LinkStats
+    sent_now: jax.Array        # (n_shards,) bool — my offered rows fully
+                               #   delivered this window (excludes parked)
+    queue_us: jax.Array        # (n_shards, n_shards) f32 queueing dwell of
+                               #   row (s, d) behind parked traffic on its
+                               #   route (replicated; 0 when uncongested)
+    unparked_now: jax.Array    # (n_shards,) i32 — events of MY parked rows
+                               #   delivered from the fabric this window,
+                               #   by destination (0 where none resumed)
+    park_wait_us: jax.Array    # (n_shards, n_shards) f32 park-dwell charge
+                               #   of rows delivered after parking: per
+                               #   window parked, the serialization time of
+                               #   one link credit budget draining ahead
+                               #   (callers with real window timestamps —
+                               #   the simulator's meta lane — use those
+                               #   instead; one-shot exchanges use this)
 
 
 class Transport:
@@ -139,9 +247,38 @@ class Transport:
         self.n_shards = n_shards
         self.wire_fmt = get_profile(wire_format)
 
-    def init_state(self) -> LinkState:
+    def init_state(self, payload_width: int = 0) -> LinkState:
+        """Fresh carried fabric state.
+
+        ``payload_width`` is the u32 width of the payload rows the caller
+        will offer (``0`` for backends/configurations that can never park
+        a row mid-route — alltoall, unthrottled torus): the in-fabric
+        transit buffers must be able to hold a full parked row.
+        """
         from repro.core import flow_control as fc
-        return fc.init_credits(0, 0, 1)
+        return init_fabric_state(fc.init_credits(0, 0, 1))
+
+    def drain_fabric(self, state: LinkState, *, axis_name: str,
+                     payload_width: int | None = None) -> TransportOut:
+        """Walk the fabric's transit buffers until empty: every parked row
+        resumes from its current hop and delivers, credits ignored (the
+        end-of-run flush quiesces the fabric) with all held credits
+        released into the notification delay line.  The base/crossbar
+        backends never park, so the default is an empty delivery."""
+        n = self.n_shards
+        w = (state.parked_payload.shape[-1] if payload_width is None
+             else payload_width)
+        return TransportOut(
+            state=state,
+            recv_payload=jnp.zeros((n, w), jnp.uint32),
+            recv_counts=jnp.zeros((n,), jnp.int32),
+            sent_mask=jnp.ones((n,), bool),
+            stats=zero_link_stats(),
+            sent_now=jnp.ones((n,), bool),
+            queue_us=jnp.zeros((n, n), jnp.float32),
+            unparked_now=jnp.zeros((n,), jnp.int32),
+            park_wait_us=jnp.zeros((n, n), jnp.float32),
+        )
 
     def route_hops(self) -> jax.Array:
         """(n_shards, n_shards) i32 links traversed by a row s -> d.

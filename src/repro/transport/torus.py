@@ -23,21 +23,28 @@ the quantities ``core.torus.link_loads`` models on the host become
 measurable (``LinkStats``) in the jitted path.
 
 Flow control is the credit discipline of ``repro.core.flow_control``,
-**hop by hop**: the carried :class:`~repro.core.flow_control.CreditBank`
-holds per-link state for every egress link of every node (a vectorized
-``n_shards * 2 * ndim`` bank — links ordered (x+, x-, y+, y-, z+, z-) per
-node, the same direction columns as ``core.torus.link_loads``).  Admitting
-a bucket row spends its event count on EVERY link of its dimension-ordered
-route — first hop and all transit hops — and spent credits only return
-``notify_latency`` windows later (the notification delay line).  A row
-whose route crosses a link without enough credits — even a mid-route link
-on some other node — is *stalled upstream*: it stays in the sender's
-store-and-forward buffer and is reported through ``sent_mask`` so the
-caller re-offers it via the overflow-residue machinery instead of
-buffering unbounded data in the fabric.  ``LinkStats.stalled_by_hop``
-records WHICH hop of the route refused each stalled row, and
-``max_in_flight_by_phase`` the peak store-and-forward occupancy per ring
-phase, so mid-route congestion is observable rather than averaged away.
+**hop by hop**: the carried :class:`~repro.transport.base.FabricState`
+holds a per-link credit bank for every egress link of every node (a
+vectorized ``n_shards * 2 * ndim`` bank — links ordered (x+, x-, y+, y-,
+z+, z-) per node, the same direction columns as ``core.torus.link_loads``)
+plus bounded in-fabric **transit buffers**.  Admitting a bucket row spends
+its event count on every link of its dimension-ordered route as it crosses
+it, and spent credits only return ``notify_latency`` windows later (the
+notification delay line).  A row that runs out of credits mid-route —
+hop ``h >= 1`` — is NOT ejected back to the source: like a real Extoll
+switch it **parks** in the store-and-forward buffer it already reached,
+holding the arrival link's credit (``FabricState.parked_by_link``), and
+the next window's admission drains parked rows *from their current hop*
+ahead of every fresh offer.  Only a row refused at hop 0 — its own source
+egress link — is *deferred*: reported through ``sent_mask`` so the caller
+re-offers it via the overflow-residue machinery.  ``LinkStats`` separates
+the two (``deferred/stalled_by_hop`` vs ``parked/unparked/parked_by_hop``)
+and the conservation identities extend to
+``offered == sent + deferred + parked`` per window and
+``credits + pending + parked_by_link == limit`` per link, so mid-route
+congestion is a measured, conserved quantity rather than averaged away.
+Queueing dwell behind parked traffic feeds the wire-latency model
+(``TransportOut.queue_us``, from ``repro.wire.latency.queueing_latency_us``).
 
 Admission is computed identically on every shard (each shard carries the
 same global bank): the per-shard offered counts are first replicated with
@@ -57,11 +64,36 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from typing import NamedTuple
+
 from repro.core import aggregator
 from repro.core import flow_control as fc
 from repro.core.torus import Torus
 from repro.transport import base
 from repro.wire import framing as wire_framing
+from repro.wire import latency as wire_latency
+
+
+class AdmissionOut(NamedTuple):
+    """Result of one window's deterministic admission replay (all shards
+    compute the identical value from the replicated ``FabricState`` and
+    the all-gathered counts matrix).  (n, n) fields are (src, dst)."""
+
+    fresh_complete: jax.Array    # bool — fresh rows delivered this window
+    fresh_park: jax.Array        # bool — fresh rows newly parked mid-route
+    resumed_complete: jax.Array  # bool — parked rows that finished delivery
+    resume_age: jax.Array        # i32 — windows the resumed rows had spent
+                                 #   parked (0 for everything else)
+    stall_hop: jax.Array         # i32 — blocking hop of DEFERRED rows, -1
+    park_count: jax.Array        # i32 — post-window occupancy table
+    park_hop: jax.Array          # i32 — post-window blocked-hop table
+    park_age: jax.Array          # i32 — post-window ages (windows parked)
+    parked_by_link: jax.Array    # (K,) i32 — post-window held units
+    links_traversed: jax.Array   # i32 — links each row crossed THIS window
+    spent: jax.Array             # (K,) i32 — subtracted from credits
+    notify: jax.Array            # (K,) i32 — entering the delay line
+    queue_events: jax.Array      # i32 — parked events queued ahead on the
+                                 #   row's route at window start
 
 def default_shape(n_shards: int) -> tuple[int, int]:
     """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
@@ -110,13 +142,23 @@ class TorusTransport(base.Transport):
     lower-index one winning forever — bounded starvation, worst-case
     ``n_shards`` progress rounds to reach top priority).  The epoch
     advances on progress rather than wall-clock windows so the rotation
-    cannot phase-lock with the ``notify_latency`` refund cycle.  A row is
-    admitted iff its source egress FIFO is not already blocked this window
-    AND every link on its dimension-ordered route has ``count`` credits
-    remaining.  A refused row blocks every later row on the same source
-    egress link (a hardware link FIFO cannot reorder its queue), even if a
-    smaller row would still fit — the same head-of-line semantics the
-    first-hop-only model had, extended along the whole route.
+    cannot phase-lock with the ``notify_latency`` refund cycle.  Parked
+    rows resume first (from their current hop — see ``_admit_global``);
+    then a fresh row is admitted iff its (src, dst) transit slot is free,
+    its source egress FIFO is not already blocked this window, and it can
+    cross at least its first link — completing if every route link has
+    ``count`` credits, parking at the first short transit link otherwise.
+    A row refused at hop 0 blocks every later row on the same source
+    egress link (a hardware link FIFO cannot reorder its queue), even if
+    a smaller row would still fit — the same head-of-line semantics the
+    first-hop-only model had.  Parked rows hold their arrival link's
+    credits, so buffer occupancy is bounded by ``link_credits`` per link
+    and sustained overload spreads back-pressure upstream hop by hop
+    (tree saturation) instead of dropping or unboundedly buffering data.
+    Dimension-ordered routing breaks cross-dimension cycles, but — as on
+    real credit fabrics without virtual channels — held buffers on one
+    ring can in principle form a cyclic wait; the end-of-run
+    :meth:`drain_fabric` walk always clears the fabric regardless.
 
     Memory note: the admission tables hold only the *active-route
     footprint* — the hop-ordered link sequence ``_link_seq`` of every
@@ -198,6 +240,7 @@ class TorusTransport(base.Transport):
                 for h, (u, dir_) in enumerate(links):
                     seq[s * n + d, h] = u * nl + dir_
         self._link_seq = jnp.asarray(seq)
+        self._route_len = jnp.asarray((seq >= 0).sum(-1).astype(np.int32))
         ids = np.arange(n)
         self._hops_matrix = jnp.asarray(
             host.hops(ids[:, None], ids[None, :]).astype(np.int32))
@@ -206,15 +249,23 @@ class TorusTransport(base.Transport):
         return self._hops_matrix
 
     # -- flow-control state ------------------------------------------------
-    def init_state(self) -> base.LinkState:
-        """Global bank: one entry per directed egress link of EVERY node.
+    def init_state(self, payload_width: int = 0) -> base.LinkState:
+        """Global bank + empty transit buffers.
 
-        Replicated on each shard; stays consistent because admission is a
-        deterministic function of the all-gathered counts (see module
-        docstring)."""
+        The bank holds one entry per directed egress link of EVERY node,
+        replicated on each shard; it stays consistent because admission
+        is a deterministic function of the all-gathered counts (see
+        module docstring).  The transit tables (``FabricState``) are
+        likewise replicated — only ``parked_payload`` is per-shard (this
+        shard's rows' wire words), so throttled callers must pass the u32
+        ``payload_width`` of the rows they will offer."""
         limit = self.link_credits if self.link_credits > 0 else 1 << 30
-        return fc.init_credits(self.n_shards * self.n_links, limit,
+        bank = fc.init_credits(self.n_shards * self.n_links, limit,
                                self.notify_latency)
+        if self.link_credits <= 0:
+            # unthrottled: nothing can ever park — zero-size tables
+            return base.init_fabric_state(bank)
+        return base.init_fabric_state(bank, self.n_shards, payload_width)
 
     # -- replicating the offered counts (neighbor permutes only) -----------
     def _allgather_counts(self, counts: jax.Array, me, axis_name: str):
@@ -232,58 +283,164 @@ class TorusTransport(base.Transport):
                 acc = acc + token
         return acc
 
-    # -- canonical hop-by-hop admission ------------------------------------
-    def _admit_global(self, state: base.LinkState, counts_all: jax.Array):
-        """Replay the canonical admission over the global counts matrix.
+    # -- canonical hop-by-hop admission with transit buffers ---------------
+    def _admit_global(self, state: base.FabricState,
+                      counts_all: jax.Array) -> AdmissionOut:
+        """Replay the canonical two-phase admission over the global state.
 
-        Returns (admitted (n, n) bool, spent (K,) i32, stall_hop (n, n)
-        i32 — index of the route hop that refused each stalled row, -1
-        for admitted rows).  Pure function of (credits, epoch,
-        counts_all): every shard computes the identical result, keeping
-        the replicated bank consistent without any extra synchronization.
-        The source-major order is rotated by ``state.epoch`` — round-robin
-        arbitration over progress rounds (see class docstring).
+        Pure function of (FabricState, counts_all): every shard computes
+        the identical result, keeping the replicated bank AND transit
+        tables consistent without extra synchronization.  Both phases
+        process rows source-major, rotated by ``bank.epoch`` (round-robin
+        arbitration over progress rounds, see class docstring):
+
+        **Phase A — drain the fabric first.**  Every parked row tries to
+        resume from its blocked hop ``h``: it advances over hops whose
+        links still have ``count`` credits, stopping at the first short
+        one.  A row that reaches the end of its route *completes* (its
+        source injects the custody payload into this window's rotation);
+        one that advances but blocks again re-parks at the new hop —
+        releasing the old arrival link's held credit into the delay line
+        and holding the new one's; one that cannot move keeps holding.
+
+        **Phase B — fresh offers.**  A routed row whose (src, dst) slot
+        is free and whose source FIFO is not head-of-line blocked walks
+        its route the same way: all links free → admitted and delivered;
+        short at hop ``h >= 1`` → enters the fabric, crosses hops
+        ``0..h-1`` and parks at ``h`` (the arrival link's credit is held,
+        the earlier hops' spends enter the delay line normally); short at
+        hop 0 → never enters the fabric: *deferred* at the sender
+        (``stall_hop = 0``) and its egress FIFO head-of-line blocks every
+        later row this window.
         """
         n, K, H = self.n_shards, self.n_shards * self.n_links, self.max_hops
         flat = counts_all.reshape(-1)
+        pc0 = state.parked_count.reshape(-1)
+        ph0 = state.parked_hop.reshape(-1)
+        pa0 = state.parked_age.reshape(-1)
         r_all = jnp.arange(n * n)
-        rows = ((r_all // n + state.epoch) % n) * n + r_all % n
+        rows = ((r_all // n + state.bank.epoch) % n) * n + r_all % n
+        hop_idx = jnp.arange(H)
 
-        def row(carry, r):
-            remaining, blocked = carry
-            c = flat[r]
-            # active-route footprint: gather the route's links only — no
-            # dense (K,) incidence row is ever materialized
-            seq = self._link_seq[r]                      # (H,) hop-ordered
-            valid = seq >= 0
+        # congestion snapshot: events already parked in the buffers along
+        # each row's REMAINING route at window start (the queueing-latency
+        # term).  A parked row's gather starts at its blocked hop, which
+        # excludes both its own held events (they sit on the arrival link
+        # at hop h-1) and traffic parked behind it — a lone row resuming
+        # through an otherwise empty fabric charges exactly zero.
+        valid_all = self._link_seq >= 0
+        idx_all = jnp.maximum(self._link_seq, 0)
+        start_hop = jnp.where(pc0 > 0, ph0, 0)[:, None]       # (n², 1)
+        queue_events = jnp.sum(
+            jnp.where(valid_all & (jnp.arange(H)[None, :] >= start_hop),
+                      state.parked_by_link[idx_all], 0),
+            axis=-1).reshape(n, n)
+
+        def resume(carry, r):
+            remaining, notify, pbl = carry
+            c, h = pc0[r], ph0[r]
+            active = c > 0
+            seq = self._link_seq[r]                     # (H,) hop-ordered
             idx = jnp.maximum(seq, 0)
-            rem_at = remaining[idx]                      # (H,)
+            valid = seq >= 0
+            L = self._route_len[r]
+            rem_at = remaining[idx]
+            short = valid & (hop_idx >= h) & (rem_at < c)
+            h_new = jnp.min(jnp.where(short, hop_idx, H))
+            complete = active & (h_new >= L)
+            h_stop = jnp.maximum(jnp.where(complete, L, h_new), h)
+            moved = active & (h_stop > h)
+            trav = valid & (hop_idx >= h) & (hop_idx < h_stop) & active
+            remaining = remaining.at[idx].add(-jnp.where(trav, c, 0))
+            # the last traversed link becomes the new hold when re-parking
+            new_hold = moved & ~complete
+            at_hold = new_hold & (hop_idx == h_stop - 1)
+            notify = notify.at[idx].add(jnp.where(trav & ~at_hold, c, 0))
+            pbl = pbl.at[idx].add(jnp.where(at_hold, c, 0))
+            # departing the old park spot releases its held arrival credit
+            oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
+            rel = jnp.where(moved, c, 0)
+            notify = notify.at[oh].add(rel)
+            pbl = pbl.at[oh].add(-rel)
+            out = (complete, jnp.where(complete, 0, c),
+                   jnp.where(active & ~complete, h_stop, 0),
+                   jnp.where(complete, pa0[r], 0),
+                   jnp.where(active & ~complete, pa0[r] + 1, 0),
+                   jnp.sum(trav.astype(jnp.int32)))
+            return (remaining, notify, pbl), out
+
+        carry = (state.bank.credits, jnp.zeros((K,), jnp.int32),
+                 state.parked_by_link)
+        carry, (res_c, pc_a, ph_a, age_res, age_a, trav_a) = lax.scan(
+            resume, carry, rows)
+
+        def offer(carry, r):
+            remaining, notify, pbl, blocked = carry
+            c = flat[r]
+            seq = self._link_seq[r]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = self._route_len[r]
             fl = seq[0]
             routed = (fl >= 0) & (c > 0)
-            feasible = jnp.all(~valid | (rem_at >= c))
+            slot_busy = pc0[r] > 0          # in-order per (src, dst) flow
             hol = blocked[jnp.maximum(fl, 0)]
-            admit = ~routed | (feasible & ~hol)
-            # spend c on every link of the route (links are distinct, pads
-            # contribute 0)
-            spend = jnp.where(admit & routed & valid, c, 0)
-            remaining = remaining.at[idx].add(-spend)
-            # blocking hop: first route link short of credits (0 if only
-            # the source FIFO head-of-line blocks an otherwise-fitting row)
+            rem_at = remaining[idx]
             short = valid & (rem_at < c)
-            h_short = jnp.min(jnp.where(short, jnp.arange(H), H))
-            stall = jnp.where(admit, -1,
-                              jnp.where(feasible, 0, h_short))
+            h_block = jnp.min(jnp.where(short, hop_idx, H))
+            ok = routed & ~slot_busy & ~hol
+            admit_c = ok & (h_block >= L)
+            admit_p = ok & (h_block < L) & (h_block >= 1)
+            defer = routed & ~admit_c & ~admit_p
+            h_stop = jnp.where(admit_c, L, jnp.where(admit_p, h_block, 0))
+            trav = valid & (hop_idx < h_stop)
+            remaining = remaining.at[idx].add(-jnp.where(trav, c, 0))
+            at_hold = admit_p & (hop_idx == h_stop - 1)
+            notify = notify.at[idx].add(jnp.where(trav & ~at_hold, c, 0))
+            pbl = pbl.at[idx].add(jnp.where(at_hold, c, 0))
             blocked = blocked.at[jnp.maximum(fl, 0)].set(
-                blocked[jnp.maximum(fl, 0)] | (routed & ~admit))
-            return (remaining, blocked), (admit, stall)
+                blocked[jnp.maximum(fl, 0)] | defer)
+            # a deferred row never left the source: every deferral is a
+            # hop-0 (egress FIFO) stall under the transit-buffer model
+            out = (admit_c, admit_p, jnp.where(defer, 0, -1), h_stop,
+                   jnp.sum(trav.astype(jnp.int32)))
+            return (remaining, notify, pbl, blocked), out
 
-        (remaining, _), (admit, stall) = lax.scan(
-            row, (state.credits, jnp.zeros((K,), bool)), rows)
-        spent = state.credits - remaining
+        carry = (*carry, jnp.zeros((K,), bool))
+        (remaining, notify, pbl, _), (adm_c, adm_p, stall, hp_b, trav_b) = \
+            lax.scan(offer, carry, rows)
+
         # un-rotate: scan outputs are in processing order, rows[i] -> i
-        admit = jnp.zeros((n * n,), bool).at[rows].set(admit)
-        stall = jnp.full((n * n,), -1, jnp.int32).at[rows].set(stall)
-        return admit.reshape(n, n), spent, stall.reshape(n, n)
+        def unrot(x, fill, dtype):
+            return jnp.full((n * n,), fill, dtype).at[rows].set(x)
+
+        fresh_complete = unrot(adm_c, False, bool)
+        fresh_park = unrot(adm_p, False, bool)
+        resumed_complete = unrot(res_c, False, bool)
+        stall_hop = unrot(stall, -1, jnp.int32)
+        hp_fresh = unrot(hp_b, 0, jnp.int32)
+        park_count = jnp.where(fresh_park, flat, unrot(pc_a, 0, jnp.int32))
+        park_hop = jnp.where(fresh_park, hp_fresh, unrot(ph_a, 0, jnp.int32))
+        # a freshly parked row enters at age 1: by the earliest window it
+        # can resume it will have waited one full window
+        park_age = jnp.where(fresh_park, 1, unrot(age_a, 0, jnp.int32))
+        links_traversed = (unrot(trav_a, 0, jnp.int32)
+                           + unrot(trav_b, 0, jnp.int32))
+        return AdmissionOut(
+            fresh_complete=fresh_complete.reshape(n, n),
+            fresh_park=fresh_park.reshape(n, n),
+            resumed_complete=resumed_complete.reshape(n, n),
+            resume_age=unrot(age_res, 0, jnp.int32).reshape(n, n),
+            stall_hop=stall_hop.reshape(n, n),
+            park_count=park_count.reshape(n, n),
+            park_hop=park_hop.reshape(n, n),
+            park_age=park_age.reshape(n, n),
+            parked_by_link=pbl,
+            links_traversed=links_traversed.reshape(n, n),
+            spent=state.bank.credits - remaining,
+            notify=notify,
+            queue_events=queue_events,
+        )
 
     # -- one bidirectional ring phase --------------------------------------
     def _ring_phase(self, bundles, axis_name, my_c, n, perm_p, perm_m,
@@ -363,24 +520,68 @@ class TorusTransport(base.Transport):
         n = self.n_shards
         me = lax.axis_index(axis_name)
         counts = counts.astype(jnp.int32)
+        is_local = jnp.arange(n) == me
+        zero_q = jnp.zeros((n, n), jnp.float32)
 
-        # 1. injection: hop-by-hop credit admission over the whole route
-        #    (compiled out when unthrottled — no all-gather, no scan)
+        # 1. injection: hop-by-hop credit admission over the whole route,
+        #    transit buffers drained first (compiled out when unthrottled
+        #    — no all-gather, no scan, no tables)
         throttled = enforce_credits and self.link_credits > 0
         if throttled:
+            if state.parked_payload.shape != payload.shape:
+                raise ValueError(
+                    f"FabricState payload buffer {state.parked_payload.shape}"
+                    f" != offered payload {payload.shape}: initialize with "
+                    f"init_state(payload_width=W) so parked rows keep "
+                    f"custody of their wire words")
             counts_all = self._allgather_counts(counts, me, axis_name)
-            admit_all, spent, stall_all = self._admit_global(
-                state, counts_all)
-            admitted = admit_all[me]
-            stall_hop = stall_all[me]
+            adm = self._admit_global(state, counts_all)
+            fresh_c = adm.fresh_complete[me]
+            fresh_p = adm.fresh_park[me]
+            resumed = adm.resumed_complete[me]
+            stall_hop = adm.stall_hop[me]
+            pc0_me = state.parked_count[me]
+            # rotation rows: fresh completions ship the caller's payload,
+            # resumed rows ship the fabric's custody copy (disjoint per
+            # destination — a fresh row behind a parked one is deferred)
+            ship_fresh = fresh_c | (is_local & (counts > 0))
+            cnt_in = (jnp.where(ship_fresh, counts, 0)
+                      + jnp.where(resumed, pc0_me, 0))
+            row_payload = jnp.where(
+                resumed[:, None], state.parked_payload,
+                jnp.where(ship_fresh[:, None], payload, jnp.uint32(0)))
+            # advance the carried fabric state: custody payload slots of
+            # newly parked rows are overwritten, completed slots expire
+            # with their zeroed counts
+            bank = fc.credit_tick(state.bank, adm.spent, notify=adm.notify)
+            state = base.FabricState(
+                bank=bank,
+                parked_count=adm.park_count,
+                parked_hop=adm.park_hop,
+                parked_age=adm.park_age,
+                parked_by_link=adm.parked_by_link,
+                parked_payload=jnp.where(fresh_p[:, None], payload,
+                                         state.parked_payload),
+            )
+            sent_mask = fresh_c | fresh_p | is_local | (counts == 0)
+            sent_now = fresh_c | is_local | (counts == 0)
+            queue_us = wire_latency.queueing_latency_us(
+                self.wire_fmt, adm.queue_events)
+            # park dwell of the rows delivered from the fabric: per window
+            # parked, one link credit budget had to drain ahead of them
+            park_wait_us = wire_latency.queueing_latency_us(
+                self.wire_fmt, adm.resume_age * self.link_credits)
         else:
-            admitted = jnp.ones((n,), bool)
-            spent = jnp.zeros((n * self.n_links,), jnp.int32)
+            fresh_p = resumed = jnp.zeros((n,), bool)
+            pc0_me = jnp.zeros((n,), jnp.int32)
             stall_hop = jnp.full((n,), -1, jnp.int32)
-        state = fc.credit_tick(state, spent)
-        cnt_in = jnp.where(admitted, counts, 0)
-        packed = base.pack_payload(
-            jnp.where(admitted[:, None], payload, jnp.uint32(0)), cnt_in)
+            cnt_in = counts
+            row_payload = payload
+            state = state._replace(bank=fc.credit_tick(
+                state.bank, jnp.zeros_like(state.bank.credits)))
+            sent_mask = sent_now = jnp.ones((n,), bool)
+            queue_us = park_wait_us = zero_q
+        packed = base.pack_payload(row_payload, cnt_in)
 
         acc = {"bytes": jnp.int32(0), "owire": jnp.int32(0), "hops": 0,
                "in_flight": jnp.int32(0),
@@ -398,31 +599,141 @@ class TorusTransport(base.Transport):
             buf = self._from_phase(recv, a)
         recv_payload, recv_counts = base.unpack_payload(buf)
 
-        # 3. stats: stalled rows histogrammed by their blocking hop
+        # 3. stats: deferred rows histogrammed by their blocking hop,
+        #    parked rows by the hop they wait at
         stalled_by_hop = jnp.zeros((self.max_hops,), jnp.int32).at[
             jnp.clip(stall_hop, 0, self.max_hops - 1)
         ].add(jnp.where(stall_hop >= 0, counts, 0))
         offered = jnp.sum(counts).astype(jnp.int32)
-        sent = jnp.sum(cnt_in).astype(jnp.int32)
+        if throttled:
+            sent = jnp.sum(jnp.where(sent_now, counts, 0)).astype(jnp.int32)
+            parked = jnp.sum(jnp.where(fresh_p, counts, 0)).astype(jnp.int32)
+            unparked = jnp.sum(
+                jnp.where(resumed, pc0_me, 0)).astype(jnp.int32)
+            pk_cnt, pk_hop = state.parked_count[me], state.parked_hop[me]
+            parked_by_hop = jnp.zeros((self.max_hops,), jnp.int32).at[
+                jnp.clip(pk_hop, 0, self.max_hops - 1)].add(pk_cnt)
+            # frame-exact bytes: each row pays one frame-train
+            # re-serialization per link it crossed THIS window, so across
+            # park/resume windows every route link is counted exactly once
+            c_row = jnp.where(resumed, pc0_me, counts)
+            owire = jnp.sum(wire_framing.frame_bytes(self.wire_fmt, c_row)
+                            * adm.links_traversed[me]).astype(jnp.int32)
+            dwell = jnp.sum(jnp.where(
+                fresh_c | resumed, queue_us[me] + park_wait_us[me],
+                0.0)).astype(jnp.float32)
+        else:
+            sent = jnp.sum(cnt_in).astype(jnp.int32)
+            parked = unparked = jnp.zeros((), jnp.int32)
+            parked_by_hop = jnp.zeros((self.max_hops,), jnp.int32)
+            owire = acc["owire"].astype(jnp.int32)
+            dwell = jnp.zeros((), jnp.float32)
         stats = base.LinkStats(
             offered_events=offered,
             sent_events=sent,
-            deferred_events=offered - sent,
+            deferred_events=offered - sent - parked,
             delivered_events=jnp.sum(recv_counts).astype(jnp.int32),
-            credit_stalls=jnp.sum(~admitted & (counts > 0)).astype(jnp.int32),
+            credit_stalls=jnp.sum(stall_hop >= 0).astype(jnp.int32),
             hops=jnp.int32(acc["hops"]),
             forwarded_bytes=acc["bytes"].astype(jnp.int32),
-            bytes_on_wire=acc["owire"].astype(jnp.int32),
+            bytes_on_wire=owire,
             max_in_flight=acc["in_flight"].astype(jnp.int32),
             stalled_by_hop=stalled_by_hop,
             max_in_flight_by_phase=jnp.stack(acc["in_flight_phase"]),
+            parked_events=parked,
+            unparked_events=unparked,
+            in_fabric_events=jnp.sum(state.parked_count[me]).astype(
+                jnp.int32) if throttled else jnp.zeros((), jnp.int32),
+            parked_by_hop=parked_by_hop,
+            queue_dwell_us=dwell,
         )
         return base.TransportOut(
             state=state,
             recv_payload=recv_payload,
             recv_counts=recv_counts,
-            sent_mask=admitted,
+            sent_mask=sent_mask,
             stats=stats,
+            sent_now=sent_now,
+            queue_us=queue_us,
+            unparked_now=jnp.where(resumed, pc0_me, 0),
+            park_wait_us=park_wait_us,
+        )
+
+    # -- end-of-run fabric walk --------------------------------------------
+    def drain_fabric(self, state: base.LinkState, *, axis_name: str,
+                     payload_width: int | None = None) -> base.TransportOut:
+        """Walk the transit buffers until the fabric is empty.
+
+        Every parked row resumes from its blocked hop and completes —
+        credits are ignored (the end-of-run flush quiesces the fabric, so
+        downstream buffer space is guaranteed to free up) and every held
+        credit is released into the notification delay line, restoring
+        ``credits + pending == limit`` on every link.  With at most one
+        parked row per (src, dst) pair a single rotation sweep delivers
+        everything; the returned state has empty tables, which tests pin.
+        Byte accounting charges each row's REMAINING links only, so a
+        route is still counted exactly once across its lifetime.
+        """
+        n = self.n_shards
+        me = lax.axis_index(axis_name)
+        if state.parked_count.size == 0:    # unthrottled: nothing parked
+            return super().drain_fabric(state, axis_name=axis_name,
+                                        payload_width=payload_width)
+        pc_me = state.parked_count[me]
+        ph_me = state.parked_hop[me]
+        packed = base.pack_payload(
+            jnp.where((pc_me > 0)[:, None], state.parked_payload,
+                      jnp.uint32(0)), pc_me)
+
+        acc = {"bytes": jnp.int32(0), "owire": jnp.int32(0), "hops": 0,
+               "in_flight": jnp.int32(0),
+               "in_flight_phase": [jnp.int32(0)] * self.ndim}
+        my_c = self._coords_of(me)
+        buf = packed
+        for a in range(self.ndim):
+            bundles = self._to_phase(buf, a)
+            perm_p, perm_m = self._perm[a]
+            recv = self._ring_phase(bundles, axis_name, my_c[a],
+                                    self.dims[a], perm_p, perm_m, acc,
+                                    phase=a)
+            buf = self._from_phase(recv, a)
+        recv_payload, recv_counts = base.unpack_payload(buf)
+
+        bank = fc.credit_tick(state.bank,
+                              jnp.zeros_like(state.bank.credits),
+                              notify=state.parked_by_link)
+        new_state = base.FabricState(
+            bank=bank,
+            parked_count=jnp.zeros_like(state.parked_count),
+            parked_hop=jnp.zeros_like(state.parked_hop),
+            parked_age=jnp.zeros_like(state.parked_age),
+            parked_by_link=jnp.zeros_like(state.parked_by_link),
+            parked_payload=jnp.zeros_like(state.parked_payload),
+        )
+        remaining_links = jnp.maximum(self._hops_matrix[me] - ph_me, 0)
+        owire = jnp.sum(
+            wire_framing.frame_bytes(self.wire_fmt, pc_me)
+            * jnp.where(pc_me > 0, remaining_links, 0)).astype(jnp.int32)
+        unparked = jnp.sum(pc_me).astype(jnp.int32)
+        stats = base.zero_link_stats(self.max_hops, self.ndim)._replace(
+            delivered_events=jnp.sum(recv_counts).astype(jnp.int32),
+            unparked_events=unparked,
+            hops=jnp.int32(acc["hops"]),
+            forwarded_bytes=acc["bytes"].astype(jnp.int32),
+            bytes_on_wire=owire,
+            max_in_flight=acc["in_flight"].astype(jnp.int32),
+            max_in_flight_by_phase=jnp.stack(acc["in_flight_phase"]),
+        )
+        return base.TransportOut(
+            state=new_state,
+            recv_payload=recv_payload,
+            recv_counts=recv_counts,
+            sent_mask=jnp.ones((n,), bool),
+            stats=stats,
+            sent_now=jnp.ones((n,), bool),
+            queue_us=jnp.zeros((n, n), jnp.float32),
+            unparked_now=pc_me,
+            park_wait_us=jnp.zeros((n, n), jnp.float32),
         )
 
     def _coords_of(self, me):

@@ -30,8 +30,8 @@ from repro.wire.codec import (DEFAULT_WORD, WireWordFormat, decode_planar,
 from repro.wire.framing import (WireFormat, frame_bytes, frame_count,
                                 frame_overhead_bytes, wire_efficiency)
 from repro.wire.latency import (LATENCY_BIN_EDGES_US, LatencySummary,
-                                hop_latency_us, summarize_latency,
-                                zero_latency_summary)
+                                hop_latency_us, queueing_latency_us,
+                                summarize_latency, zero_latency_summary)
 from repro.wire.profiles import ETHERNET, EXTOLL, PROFILES, get_profile
 
 __all__ = [
@@ -40,6 +40,6 @@ __all__ = [
     "WireFormat", "frame_bytes", "frame_count", "frame_overhead_bytes",
     "wire_efficiency",
     "LATENCY_BIN_EDGES_US", "LatencySummary", "hop_latency_us",
-    "summarize_latency", "zero_latency_summary",
+    "queueing_latency_us", "summarize_latency", "zero_latency_summary",
     "EXTOLL", "ETHERNET", "PROFILES", "get_profile",
 ]

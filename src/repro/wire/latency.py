@@ -2,21 +2,29 @@
 
 The quantity the follow-up papers measure (pulse latency distributions
 between chips) decomposes, for a store-and-forward fabric, into exactly
-three charges per delivered event:
+four charges per delivered event:
 
 1. **waiting time** — systemtime spent parked before the transport
    admitted the event's bucket row: the tail of its flush window, plus
-   one full window per credit-stall re-offer and per residue round-trip.
-   The simulator derives this from the *injection timestamp* each event
-   carries in its wire word's meta lane (:mod:`repro.wire.codec`), so
-   deferred rows accumulate waiting time across re-offers with no extra
-   bookkeeping.
+   one full window per credit-stall re-offer and per residue round-trip,
+   plus one full window per window the row spent PARKED in an in-fabric
+   transit buffer (``FabricState``) waiting for a congested downstream
+   link.  The simulator derives this from the *injection timestamp* each
+   event carries in its wire word's meta lane (:mod:`repro.wire.codec`),
+   so deferred AND parked rows accumulate waiting time across re-offers
+   and resume windows with no extra bookkeeping.
 2. **serialization** — ``frame_bytes(row) / bytes_per_us`` per traversed
    link: a store-and-forward hop cannot cut a frame through, it re-clocks
    the whole frame onto the next link.
 3. **switch latency** — ``switch_latency_us`` per traversed link.
+4. **queueing** — :func:`queueing_latency_us`: the serialization time of
+   the traffic already parked in the egress buffers along the row's
+   route, which must drain ahead of it.  This is the congestion term the
+   serialization-only model lacked: an uncontended link charges nothing
+   extra (the term vanishes with empty buffers), a saturated one charges
+   the frame train of everything queued ahead.
 
-Charges 2+3 are per *row* (all events of a bucket row share one frame
+Charges 2–4 are per *row* (all events of a bucket row share one frame
 train and one route), so the per-window summary works on row-granular
 latencies weighted by row event counts.  The summary is a fixed-bin
 log-spaced histogram plus weighted p50/p99/max/mean — jit-safe, scan-able
@@ -66,6 +74,20 @@ def hop_latency_us(fmt: WireFormat, counts, hops) -> jax.Array:
     hops = jnp.asarray(hops, jnp.int32)
     ser = frame_bytes(fmt, counts).astype(jnp.float32) / fmt.bytes_per_us
     return hops.astype(jnp.float32) * (fmt.switch_latency_us + ser)
+
+
+def queueing_latency_us(fmt: WireFormat, queued_events) -> jax.Array:
+    """Congestion dwell of a row: before it can cross its route's links,
+    the events already parked in those links' store-and-forward buffers
+    (``FabricState.parked_by_link``, gathered over the row's route) must
+    serialize out ahead of it — one full frame train of the queued
+    traffic at the link's bandwidth.  Empty buffers charge exactly 0, so
+    an uncongested run keeps the serialization-only latency unchanged.
+
+    ``queued_events`` broadcasts; returns f32 microseconds.
+    """
+    q = jnp.asarray(queued_events, jnp.int32)
+    return frame_bytes(fmt, q).astype(jnp.float32) / fmt.bytes_per_us
 
 
 def summarize_latency(lat_us: jax.Array, weights: jax.Array) -> LatencySummary:

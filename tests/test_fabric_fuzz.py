@@ -1,0 +1,313 @@
+"""Cross-backend fabric invariant fuzz (subprocess, 8 forced host devices).
+
+The transit-buffer fabric (PR 5) has a full invariant set that must hold
+for EVERY window of EVERY configuration — this file sweeps it over a
+seeded random matrix of traffic, credit budgets and topologies (the seed
+matrix is fixed, so CI failures reproduce exactly):
+
+* **conservation with parked** — ``offered == sent + deferred + parked``
+  per shard+window; globally ``sum(sent) + sum(unparked) ==
+  sum(delivered)``; in-fabric occupancy balances window to window.
+* **credit-unit invariance** — ``credits + pending + parked_by_link``
+  equals its initial per-link total after every window, through
+  ``notify_latency`` 0 and 2, a zero-credit bank, and the end-of-run
+  fabric walk + uncredited drain.
+* **deferral attribution** — ``deferred == stalled_by_hop.sum()`` with
+  every deferral at hop 0 (mid-route shortages park, they never re-enter
+  at the source), and parked rows only ever wait at transit hops >= 1.
+* **payload custody** — a row delivered N windows after it parked arrives
+  bit-exact (the fabric's custody copy, not a re-offer), checked against
+  a host-side ledger of every parked row.
+* **latency accounting** — the simulator's per-window digest histogram
+  counts exactly the delivered events under congestion (waiting + hops +
+  queueing), and the queueing term vanishes on an uncontended fabric.
+
+Case generation reuses the ``tests/prop.py`` strategy discipline (seeded
+``np.random.default_rng``, reproduction line on failure).  The sweep runs
+>= 200 seeded cases: 10 fabric configurations x 20 traffic seeds, plus
+the simulator-level congestion runs and the cross-backend equivalence
+pin (ample credits + empty buffers => torus2d/torus3d bit-identical to
+alltoall, latency digests equal to the hop-only charges — the queueing
+term contributes exactly nothing — under the new FabricState carry).
+"""
+import os
+
+import pytest
+
+from md_helper import run_md
+
+pytestmark = pytest.mark.slow
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def test_fabric_invariant_fuzz_transport_level():
+    out = run_md(f"""
+import sys
+sys.path.insert(0, {TESTS_DIR!r})
+""" + r"""
+import functools
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro import transport
+from prop import draw
+
+D, W, WINDOWS = 8, 6, 3
+SEEDS = 20
+mesh = jax.make_mesh((D,), ("wafer",))
+spec = P("wafer")
+counts_of = draw.array((D, D), 0, 31, np.int32)
+payload_of = draw.array((D, D, W), 0, 1 << 31, np.int64)
+
+def make_fns(t):
+    def body(lstate, p, c, enforce):
+        lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+        out = t.exchange(lstate, p[0], c[0], axis_name="wafer",
+                         enforce_credits=enforce)
+        return jax.tree_util.tree_map(
+            lambda x: x[None],
+            (out.state, out.recv_payload, out.recv_counts, out.sent_mask,
+             out.sent_now, out.stats))
+    def dbody(lstate):
+        lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+        out = t.drain_fabric(lstate, axis_name="wafer")
+        return jax.tree_util.tree_map(
+            lambda x: x[None],
+            (out.state, out.recv_payload, out.recv_counts, out.stats))
+    mk = lambda enforce: jax.jit(shard_map(
+        functools.partial(body, enforce=enforce), mesh=mesh,
+        in_specs=(spec, spec, spec), out_specs=spec, check_rep=False))
+    walk = jax.jit(shard_map(dbody, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec, check_rep=False))
+    return mk(True), mk(False), walk
+
+def fuzz_case(fns, t, seed, zero_bank):
+    fn, fn_drain, fn_walk = fns
+    rng = np.random.default_rng(seed * 7919 + 13)
+    st0 = t.init_state(W)
+    if zero_bank:
+        st0 = st0._replace(bank=st0.bank._replace(
+            credits=jnp.zeros_like(st0.bank.credits)))
+    tot0 = (np.asarray(st0.bank.credits)
+            + np.asarray(st0.bank.pending).sum(-1)
+            + np.asarray(st0.parked_by_link))
+    lstate = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (D,) + x.shape), st0)
+    ledger = {}                     # (s, d) -> custody payload row
+    pc_prev = np.zeros((D, D), np.int64)
+    for win in range(WINDOWS):
+        counts = jnp.asarray(counts_of(rng))
+        payload = jnp.asarray(payload_of(rng).astype(np.uint32))
+        lstate, rp, rcnt, mask, snow, st = fn(lstate, payload, counts)
+        off = np.asarray(st.offered_events)
+        sent = np.asarray(st.sent_events)
+        defr = np.asarray(st.deferred_events)
+        park = np.asarray(st.parked_events)
+        unpark = np.asarray(st.unparked_events)
+        infab = np.asarray(st.in_fabric_events)
+        cm, pm = np.asarray(counts), np.asarray(payload)
+        # conservation with parked
+        assert (off == sent + defr + park).all()
+        assert sent.sum() + unpark.sum() == np.asarray(
+            st.delivered_events).sum() == np.asarray(rcnt).sum()
+        # deferral attribution: hop-0 only; parked rows at hops >= 1
+        sbh = np.asarray(st.stalled_by_hop)
+        pbh = np.asarray(st.parked_by_hop)
+        assert (sbh.sum(-1) == defr).all() and sbh[:, 1:].sum() == 0
+        assert (pbh[:, 0] == 0).all()
+        assert (pbh.sum(-1) == infab).all()
+        held = np.where(np.asarray(mask), 0, cm).sum(1)
+        assert (held == defr).all()
+        # credit-unit invariance + replication of the global tables
+        cr = np.asarray(lstate.bank.credits)
+        pend = np.asarray(lstate.bank.pending)
+        pbl = np.asarray(lstate.parked_by_link)
+        pc = np.asarray(lstate.parked_count)
+        ph = np.asarray(lstate.parked_hop)
+        assert (cr >= 0).all() and (pbl >= 0).all() and (pc >= 0).all()
+        assert (cr == cr[0]).all() and (pend == pend[0]).all()
+        assert (pc == pc[0]).all() and (pbl == pbl[0]).all()
+        assert (cr[0] + pend[0].sum(-1) + pbl[0] == tot0).all()
+        # occupancy balance: parked in, unparked out
+        assert (pc[0].sum(1) == pc_prev.sum(1) + park - unpark).all()
+        # payload custody: newly parked rows enter the ledger; rows the
+        # fabric completed must arrive bit-exact from custody
+        fresh_park = (pc[0] > 0) & (pc_prev == 0)
+        resumed = (pc_prev > 0) & (pc[0] == 0)
+        rp = np.asarray(rp)           # (D_dst, D_src, W)
+        snow = np.asarray(snow)
+        for s in range(D):
+            for d in range(D):
+                if fresh_park[s, d]:
+                    ledger[(s, d)] = pm[s, d].copy()
+                    assert ph[0, s, d] >= 1
+                if resumed[s, d]:
+                    exp = ledger.pop((s, d))
+                    assert (rp[d, s] == exp).all(), (s, d, win)
+                elif snow[s, d] and s != d and cm[s, d] > 0:
+                    assert (rp[d, s] == pm[s, d]).all(), (s, d, win)
+        pc_prev = pc[0].astype(np.int64)
+    # end of run: walk the fabric empty, then an uncredited final flush
+    lstate, rp, rcnt, st = fn_walk(lstate)
+    rp = np.asarray(rp)
+    for (s, d), exp in sorted(ledger.items()):
+        assert (rp[d, s] == exp).all(), ("drain", s, d)
+    assert np.asarray(rcnt).sum() == pc_prev.sum()
+    assert (np.asarray(lstate.parked_count) == 0).all()
+    assert (np.asarray(lstate.parked_by_link) == 0).all()
+    counts = jnp.asarray(counts_of(rng))
+    payload = jnp.asarray(payload_of(rng).astype(np.uint32))
+    lstate, rp, rcnt, mask, snow, st = fn_drain(lstate, payload, counts)
+    assert np.asarray(mask).all()
+    assert np.asarray(rcnt).sum() == np.asarray(counts).sum()
+    cr = np.asarray(lstate.bank.credits)
+    pend = np.asarray(lstate.bank.pending)
+    assert (cr[0] + pend[0].sum(-1) == tot0).all()
+
+# fixed seed matrix: 10 fabric configurations x 20 traffic seeds = 200
+# seeded cases (zero_bank rides the credits=64 configurations)
+CONFIGS = []
+for name, opts in [("torus2d", dict(nx=2, ny=4)),
+                   ("torus3d", dict(nx=2, ny=2, nz=2))]:
+    for credits, nl, zero_bank in [(36, 2, False), (96, 2, False),
+                                   (40, 0, False),        # zero-latency
+                                   (1 << 20, 2, False),   # ample
+                                   (64, 2, True)]:        # zero-credit
+        CONFIGS.append((name, opts, credits, nl, zero_bank))
+
+cases = 0
+for name, opts, credits, nl, zero_bank in CONFIGS:
+    t = transport.create(name, n_shards=D, link_credits=credits,
+                         notify_latency=nl, **opts)
+    fns = make_fns(t)
+    for seed in range(SEEDS):
+        try:
+            fuzz_case(fns, t, seed, zero_bank)
+        except Exception:
+            print(f"[fuzz] FAILED {name} credits={credits} nl={nl} "
+                  f"zero_bank={zero_bank} seed={seed}")
+            raise
+        cases += 1
+print(f"FUZZ_CASES={cases}")
+assert cases >= 200
+print("FABRIC_FUZZ_OK")
+""", timeout=1200)
+    assert "FABRIC_FUZZ_OK" in out
+
+
+def test_fabric_fuzz_simulator_latency_invariants():
+    """Congested simulator runs: the latency digest histogram counts
+    exactly the delivered events of every window (waiting + hop charges
+    + queueing), percentile ordering holds, and the park/resume fabric
+    is actually exercised end to end."""
+    out = run_md("""
+import jax, numpy as np
+from repro.snn import microcircuit as mc, network, simulator as sim
+spec = mc.MicrocircuitSpec(scale=0.003)
+w, is_inh = spec.weight_matrix()
+part = network.build_partition(w, is_inh, n_shards=4)
+mesh = jax.make_mesh((4,), ("wafer",))
+
+for transport, kw in [("torus2d", {}),
+                      ("torus3d", dict(torus_nx=1, torus_ny=2,
+                                       torus_nz=2))]:
+    cfg = sim.SimConfig(n_shards=4, per_shard=part.per_shard,
+                        max_fan=part.fanout.shape[1], window=8,
+                        ring_len=32, e_max=256, capacity=32,
+                        transport=transport, link_credits=32,
+                        notify_latency=2, **kw)
+    init, runf = sim.build_sharded_sim(mesh, "wafer", cfg, part,
+                                       spec.bg_rates())
+    exercised = False
+    for seed in (0, 1, 2):
+        st, stats = runf(init(seed), 10)
+        s = jax.tree_util.tree_map(np.asarray, stats)
+        link = s.link
+        assert (s.latency.hist.sum(-1) == link.delivered_events).all()
+        assert (s.latency.max_us >= s.latency.p99_us).all()
+        assert (s.latency.p99_us >= s.latency.p50_us).all()
+        assert (link.offered_events == link.sent_events
+                + link.deferred_events + link.parked_events).all()
+        assert ((link.sent_events + link.unparked_events).sum(0)
+                == link.delivered_events.sum(0)).all()
+        assert (link.stalled_by_hop.sum(-1) == link.deferred_events).all()
+        exercised = exercised or (link.parked_events.sum() > 0
+                                  and link.unparked_events.sum() > 0)
+    assert exercised, transport + ": fabric never parked+resumed"
+print("SIM_FUZZ_OK")
+""", n_devices=4, timeout=1200)
+    assert "SIM_FUZZ_OK" in out
+
+
+def test_cross_backend_equivalence_ample_credits():
+    """With ample credits and empty transit buffers the torus backends
+    remain bit-identical to ``alltoall`` — delivered events, guids,
+    counts and multicast links — under the new FabricState carry, and
+    their latency digests equal the hop-only charges exactly: the
+    queueing term contributes nothing on an uncontended fabric."""
+    out = run_md("""
+import jax, jax.numpy as jnp, numpy as np
+from repro import wire
+from repro.core import events as ev, routing as rt
+from repro.core.exchange import make_exchange
+n_shards, N, C, n_addr = 8, 64, 16, 96
+mesh = jax.make_mesh((n_shards,), ("wafer",))
+tabs = []
+for s in range(n_shards):
+    projs = [rt.Projection(a, a+1, dest_node=(a * 5 + s) % n_shards,
+                           dest_links=[a % 3, 7]) for a in range(n_addr)]
+    tabs.append(rt.build_tables(n_addr, projs, n_guid=64))
+stacked = rt.RoutingTables(
+    dest_of_addr=jnp.stack([t.dest_of_addr for t in tabs]),
+    guid_of_addr=jnp.stack([t.guid_of_addr for t in tabs]),
+    mcast_of_guid=jnp.stack([t.mcast_of_guid for t in tabs]))
+addr = jax.random.randint(jax.random.PRNGKey(0), (n_shards, N), 0, n_addr)
+ts = jax.random.randint(jax.random.PRNGKey(1), (n_shards, N), 0, 1000)
+words = ev.pack(addr, ts)
+
+run_a = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
+                      n_addr_per_shard=n_addr, transport="alltoall")
+ref = run_a(words, stacked)
+
+from repro.core.torus import Torus
+ids = np.arange(n_shards)
+for backend, opts, pad in [
+    ("torus2d", {"nx": 2, "ny": 4, "link_credits": 1 << 20}, (2, 4, 1)),
+    ("torus3d", {"nx": 2, "ny": 2, "nz": 2, "link_credits": 1 << 20},
+     (2, 2, 2)),
+]:
+    run = make_exchange(mesh, "wafer", n_shards=n_shards, capacity=C,
+                        n_addr_per_shard=n_addr, transport=backend,
+                        transport_opts=opts)
+    t = run(words, stacked)
+    for field in ("recv_events", "recv_guids", "recv_counts",
+                  "link_events"):
+        assert (np.asarray(getattr(ref, field))
+                == np.asarray(getattr(t, field))).all(), (backend, field)
+    assert np.asarray(t.sent_mask).all()
+    assert np.asarray(t.link.parked_events).sum() == 0
+    assert np.asarray(t.link.in_fabric_events).sum() == 0
+    # the carried FabricState leaves the run exactly as it entered:
+    # empty tables, full credit conservation
+    ls = t.link_state
+    assert (np.asarray(ls.parked_count) == 0).all()
+    assert (np.asarray(ls.parked_by_link) == 0).all()
+    assert (np.asarray(ls.bank.credits)
+            + np.asarray(ls.bank.pending).sum(-1) == 1 << 20).all()
+    # latency digest == hop-only charges (queueing term exactly zero):
+    # recompute the digest per shard from counts and the host hop model
+    host = Torus(nx=pad[0], ny=pad[1], nz=pad[2])
+    hops = host.hops(ids[:, None], ids[None, :]).astype(np.int64)
+    fmt = wire.get_profile("extoll")
+    for me in range(n_shards):
+        cnt = jnp.asarray(np.asarray(t.sent_counts)[me])
+        lat = wire.hop_latency_us(fmt, cnt, jnp.asarray(hops[me]))
+        w8 = jnp.where(jnp.arange(n_shards) != me, cnt, 0)
+        exp = wire.summarize_latency(lat, w8)
+        got = jax.tree_util.tree_map(lambda x: x[me], t.latency)
+        for a, b in zip(exp, got):
+            assert (np.asarray(a) == np.asarray(b)).all(), (backend, me)
+print("CROSS_BACKEND_OK")
+""")
+    assert "CROSS_BACKEND_OK" in out
