@@ -1,0 +1,162 @@
+"""Streaming multi-tenant serving engine under open-loop Poisson load.
+
+Runs the spike serving engine (``repro.serve.spike_engine``) on 8 forced
+host devices in a subprocess (the ``bench_transport``/``bench_wire``
+pattern): 2 tenants multiplexed onto one credit-partitioned ``torus3d``
+fabric, seeded open-loop Poisson traffic with a bursty saturating hot
+tenant next to a quiet reserved-slice tenant.
+
+Rows in ``BENCH_serve.json``:
+
+* ``engine/sustained`` — end-to-end sustained delivered events/s across
+  all tenants (ingest thread + staging + windowed device segments +
+  drain), wall-clock measured after a compile warmup.
+* ``tenant/<name>`` — per-tenant delivered events/s and latency digest
+  (p50/p99/max/mean us from the merged log-bin histogram), plus the
+  conservation fields (injected/delivered/shed/clipped).
+* ``qos/quiet_p99`` — the isolation claim as a number: the quiet
+  tenant's p99 with the hot co-tenant saturating the fabric, divided by
+  its p99 from a solo run offered IDENTICAL traffic (per-(tenant,
+  window) RNG substreams make the two runs event-for-event comparable).
+  The factor must stay within ``QOS_P99_BOUND``; the bench fails loudly
+  otherwise, so a committed artifact always carries a passing QoS row.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+# quiet-tenant p99 under a saturating co-tenant may not exceed its solo
+# p99 by more than this factor (2 log-2 histogram bins: the bounded
+# queueing-dwell coupling, never whole deferred windows)
+QOS_P99_BOUND = 4.0
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import json, sys
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.serve.loadgen import PoissonLoadGen, TenantProfile
+from repro.serve.spike_engine import EngineConfig, SpikeEngine
+from repro.serve.tenancy import TenantSpec, guaranteed_epw
+
+params = json.loads(sys.argv[1])
+C = params["capacity"]
+segments = params["segments"]
+n = 8
+mesh = Mesh(np.array(jax.devices()[:n]), ("w",))
+cfg = EngineConfig(capacity=C, link_credits=params["link_credits"],
+                   notify_latency=2, window_us=100.0,
+                   seg_windows=params["seg_windows"], nx=2, ny=2, nz=2)
+tenants = [TenantSpec("quiet", reserve=params["quiet_reserve"],
+                      rate_epw=params["quiet_rate"]),
+           TenantSpec("hot", reserve=params["hot_reserve"],
+                      rate_epw=params["hot_rate"])]
+
+def run(hot_rate):
+    profiles = [TenantProfile("quiet", params["quiet_rate"]),
+                TenantProfile("hot", hot_rate, burst_factor=3.0,
+                              burst_prob=0.25)]
+    src = PoissonLoadGen(params["seed"], profiles, n, C)
+    eng = SpikeEngine(mesh, "w", tenants, cfg, src)
+    eng.warmup()
+    return eng.run(segments)
+
+solo = run(0.0)                     # quiet tenant alone on the fabric
+rep = run(params["hot_rate"])       # + saturating bursty co-tenant
+
+rows = []
+shape = "S=8 T=2 C={} W={}".format(C, rep.windows)
+wall_ms = rep.wall_s * 1e3
+rows.append({
+    "op": "engine/sustained", "shape": shape,
+    "median_ms": wall_ms / max(rep.windows, 1),
+    "events_per_s": rep.events_per_s,
+    "windows": rep.windows, "drain_windows": rep.drain_windows,
+    "mesh": "2x2x2", "link_credits": params["link_credits"],
+    "notify_latency": 2,
+    "conservation": "injected==delivered+shed (checked)",
+})
+for t, d in enumerate(rep.tenants):
+    rows.append({
+        "op": "tenant/" + d.name, "shape": shape,
+        "median_ms": wall_ms / max(rep.windows, 1),
+        "events_per_s": d.delivered / rep.wall_s,
+        "reserve": tenants[t].reserve,
+        "guaranteed_epw_per_link": guaranteed_epw(tenants[t], 2),
+        "offered_epw": (params["quiet_rate"], params["hot_rate"])[t],
+        "injected": int(rep.injected[t]), "delivered": int(rep.delivered[t]),
+        "shed": int(rep.shed[t]), "clipped": int(rep.clipped[t]),
+        "latency_p50_us": d.p50_us, "latency_p99_us": d.p99_us,
+        "latency_max_us": round(d.max_us, 3),
+        "latency_mean_us": round(d.mean_us, 3),
+    })
+
+q_solo = solo.tenants[0]
+q_cont = rep.tenants[0]
+factor = q_cont.p99_us / max(q_solo.p99_us, 1e-9)
+rows.append({
+    "op": "qos/quiet_p99", "shape": shape, "median_ms": 0.0,
+    "solo_p99_us": q_solo.p99_us, "contended_p99_us": q_cont.p99_us,
+    "solo_p50_us": q_solo.p50_us, "contended_p50_us": q_cont.p50_us,
+    "factor": round(factor, 3), "bound": params["bound"],
+    "hot_offered_epw": params["hot_rate"],
+    "identical_quiet_traffic": bool(
+        solo.injected[0] == rep.injected[0]),
+})
+assert solo.injected[0] == rep.injected[0], "quiet substream diverged"
+assert factor <= params["bound"], (
+    "QoS violated: quiet p99 %.1fus contended vs %.1fus solo "
+    "(factor %.2f > bound %.1f)" % (q_cont.p99_us, q_solo.p99_us,
+                                    factor, params["bound"]))
+print("BENCH_JSON " + json.dumps(rows))
+'''
+
+
+def main(report) -> None:
+    # the p99 bound is a contract about a tenant whose offered load fits
+    # its guaranteed slice: quiet's reserve must cover its per-link BURST
+    # load (Poisson tails, multiplied by multi-hop credit spend), not
+    # just its mean — solo it could borrow burst room from the shared
+    # pool, contended the hot tenant owns that pool
+    params = {
+        "capacity": 16 if report.smoke else 32,
+        "seg_windows": 4 if report.smoke else 8,
+        "segments": 3 if report.smoke else 24,
+        "link_credits": 64,
+        "quiet_reserve": 32,
+        "hot_reserve": 8,
+        "quiet_rate": 40.0,
+        "hot_rate": 200.0 if report.smoke else 600.0,
+        "seed": 7,
+        "bound": QOS_P99_BOUND,
+    }
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, json.dumps(params)],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"bench_serve subprocess failed:\n{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][0]
+    for row in json.loads(line[len("BENCH_JSON "):]):
+        extra = {k: row[k] for k in row
+                 if k not in ("op", "median_ms", "events_per_s", "shape")}
+        notes = ""
+        if row["op"].startswith("tenant/"):
+            notes = (f"p99={row['latency_p99_us']}us "
+                     f"shed={row['shed']}")
+        elif row["op"].startswith("qos/"):
+            notes = f"factor={row['factor']} bound={row['bound']}"
+        report.bench("serve", row["op"], row["shape"], row["median_ms"],
+                     row.get("events_per_s"), notes=notes, extra=extra)

@@ -28,7 +28,8 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 SCRIPT = r'''
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
 import json, sys, time
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import events as ev, routing as rt

@@ -2,6 +2,16 @@
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only <name>] [--smoke]
                                                 [--out-dir DIR]
+
+For stable numbers, source the environment tuning first::
+
+    . tools/env.sh && PYTHONPATH=src python -m benchmarks.run
+
+``tools/env.sh`` preloads tcmalloc when present, pins OpenMP threading,
+silences TF/XLA logging and sets ``--xla_step_marker_location`` so
+profiles attribute time per flush window; everything in it is gated and
+append-only, so it is safe on any machine.  The harness reports whether
+it was sourced (the ``REPRO_BENCH_ENV`` sentinel) in the CSV header.
 Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
 ``BENCH_<group>.json`` files (one JSON list of
 ``{op, shape, median_ms, events_per_s, ...}`` rows per group, currently
@@ -33,6 +43,9 @@ Modules:
   bench_wire         extoll vs ethernet wire profiles on every backend:
                      frame-exact bytes_on_wire, wire efficiency and
                      latency percentiles (+ codec round-trip row)
+  bench_serve        streaming multi-tenant serving engine under open-loop
+                     Poisson load: sustained events/s, per-tenant latency
+                     digests and the quiet-tenant p99 QoS isolation row
 """
 from __future__ import annotations
 
@@ -52,10 +65,11 @@ MODULES = [
     "bench_kernels",
     "bench_transport",
     "bench_wire",
+    "bench_serve",
 ]
 
 SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels",
-                 "bench_transport", "bench_wire"]
+                 "bench_transport", "bench_wire", "bench_serve"]
 
 
 def median_ms(fn, *args, iters: int = 15) -> float:
@@ -129,6 +143,9 @@ def main() -> None:
     modules = SMOKE_MODULES if args.smoke else MODULES
 
     print("name,value,notes")
+    report("env/tuned", int(os.environ.get("REPRO_BENCH_ENV", "0") != "0"),
+           "1 when tools/env.sh was sourced (tcmalloc, OMP pinning, "
+           "XLA step markers)")
     for mod_name in modules:
         if args.only and args.only not in mod_name:
             continue

@@ -185,6 +185,100 @@ def credit_tick(bank: CreditBank, spent: jax.Array,
     return CreditBank(credits=credits, pending=pending, epoch=epoch)
 
 
+# ---------------------------------------------------------------------------
+# Per-tenant credit partitioning — multi-tenant QoS layered on CreditBank.
+#
+# A fabric serving T concurrent experiments splits each physical link's
+# ``limit`` credits into T guaranteed slices (one per tenant) plus one
+# shared best-effort pool.  The split is realised WITHOUT changing the
+# bank mechanics: a partitioned bank is an ordinary ``CreditBank`` with
+# ``(T + 1) * K`` slots for K physical links —
+#
+#   slot  t * K + l   : tenant ``t``'s reserved slice of link ``l``
+#   slot  T * K + l   : link ``l``'s shared pool (the last slot group)
+#
+# so ``credit_tick`` / the conservation identity / the notification delay
+# lines all apply per *slot* unmodified.  Spending discipline (enforced by
+# the tenant-aware admission in ``repro.transport.torus``): a tenant's row
+# draws reserved-first, shared-second at every link it crosses, and is
+# admitted only if reserved + shared cover the row at every link up to the
+# stall point.  Since no other tenant can draw from slice ``t``, tenant
+# ``t`` is guaranteed ``reserve[t] / max(notify_latency, 1)`` events per
+# link per window of sustained admission no matter how saturated the
+# shared pool is — that is the QoS floor the serve benchmarks pin.
+# ---------------------------------------------------------------------------
+
+class CreditPartition(NamedTuple):
+    """Static QoS split of each link's credit budget across tenants.
+
+    reserve: per-tenant guaranteed credits per link (len T tuple)
+    shared:  best-effort credits per link, drawn by any tenant after its
+             own slice is exhausted
+    """
+
+    reserve: tuple[int, ...]
+    shared: int
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.reserve)
+
+    @property
+    def limit(self) -> int:
+        """Total credits per physical link (== the unpartitioned limit)."""
+        return sum(self.reserve) + self.shared
+
+    @property
+    def n_slots_per_link(self) -> int:
+        return self.n_tenants + 1
+
+
+def make_partition(link_credits: int, reserve) -> CreditPartition:
+    """Build a partition of ``link_credits`` with per-tenant ``reserve``.
+
+    ``reserve`` is a sequence of per-tenant guaranteed slices; whatever is
+    left over becomes the shared pool.  Rejects oversubscription — the
+    guarantee would be a lie if the slices did not physically exist.
+    """
+    reserve = tuple(int(r) for r in reserve)
+    if not reserve:
+        raise ValueError("need at least one tenant")
+    if any(r < 0 for r in reserve):
+        raise ValueError(f"negative reserve: {reserve}")
+    total = sum(reserve)
+    if total > link_credits:
+        raise ValueError(
+            f"oversubscribed: sum(reserve)={total} > link_credits={link_credits}")
+    return CreditPartition(reserve=reserve, shared=link_credits - total)
+
+
+def partition_limits(part: CreditPartition, n_links: int) -> jax.Array:
+    """Per-slot initial credits, ((T+1)*K,) i32, slot layout as above."""
+    per_link = list(part.reserve) + [part.shared]
+    limits = jnp.asarray(per_link, jnp.int32)[:, None]
+    return jnp.broadcast_to(limits, (part.n_slots_per_link, n_links)).reshape(-1)
+
+
+def init_credits_from_limits(limits: jax.Array,
+                             notify_latency: int) -> CreditBank:
+    """Fresh bank with per-slot (non-uniform) initial credits."""
+    limits = jnp.asarray(limits, jnp.int32)
+    return CreditBank(
+        credits=limits,
+        pending=jnp.zeros((limits.shape[0], max(notify_latency, 0)),
+                          jnp.int32),
+        epoch=jnp.int32(0),
+    )
+
+
+def init_partitioned_credits(part: CreditPartition, n_links: int,
+                             notify_latency: int) -> CreditBank:
+    """Partitioned bank over ``n_links`` physical links: ``(T+1)*n_links``
+    slots, tenant slices first, shared pool last."""
+    return init_credits_from_limits(partition_limits(part, n_links),
+                                    notify_latency)
+
+
 class RunStats(NamedTuple):
     produced: jax.Array
     consumed: jax.Array

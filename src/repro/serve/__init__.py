@@ -1,2 +1,15 @@
-"""Serving: batched engine with continuous slots + credit accounting."""
+"""Serving subsystems.
+
+* :mod:`repro.serve.engine` — batched request/response engine with
+  continuous slots + credit accounting (model serving).
+* :mod:`repro.serve.spike_engine` — streaming multi-tenant spike serving
+  over one credit-partitioned fabric (ingest thread, pinned double
+  buffers, windowed device segments, graceful drain).
+* :mod:`repro.serve.tenancy` — tenant QoS specs, credit partitioning and
+  per-tenant conservation/latency ledgers.
+* :mod:`repro.serve.loadgen` — seeded open-loop Poisson traffic.
+"""
 from repro.serve import engine  # noqa: F401
+from repro.serve import loadgen  # noqa: F401
+from repro.serve import spike_engine  # noqa: F401
+from repro.serve import tenancy  # noqa: F401

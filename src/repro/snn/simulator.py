@@ -419,12 +419,43 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
     return init_pending, init_link, body, drain
 
 
-def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
-                      bg_rates: np.ndarray, bg_weight: float = 87.8):
-    """Jitted multi-window simulator over a device mesh.
+class SimCarry(NamedTuple):
+    """Resumable between-segment state of a sharded simulation: everything
+    the window pipeline threads through ``lax.scan`` — neuron/ring state,
+    the pipelined pending buckets + residue, and the fabric's link
+    flow-control state (credits, pending notifies, parked rows).  All
+    leaves are stacked with a leading ``n_shards`` axis (``P(axis)``)."""
 
-    Returns (init_fn(seed) -> stacked ShardState, run_fn(state, n_windows)
-    -> (state, stacked WindowStats over windows)).
+    state: ShardState
+    pending: PendingWindow
+    link: tp.LinkState
+
+
+def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
+                           part: network.Partition, bg_rates: np.ndarray,
+                           bg_weight: float = 87.8):
+    """Segment-granular jitted simulator over a device mesh.
+
+    The whole-run scan of :func:`build_sharded_sim` is a special case of
+    this entry point; the serving engine is the general one — it needs to
+    run *bounded segments* of windows with the pipeline state resumable
+    between dispatches (so the host can overlap staging/ingestion with
+    device work and decide, between segments, whether to keep serving or
+    quiesce).
+
+    Returns ``(init, run_segment, finish)``:
+      init(seed)                    -> SimCarry (fresh neurons, empty
+                                       buckets, full credits)
+      run_segment(carry, n_windows) -> (SimCarry, stacked WindowStats) —
+                                       compiled once per distinct
+                                       ``n_windows`` and cached
+      finish(carry)                 -> (stacked ShardState, (n_shards,)
+                                       deadline misses) — drains parked
+                                       fabric rows and flushes the final
+                                       pending buckets via the transport's
+                                       ``drain_fabric`` + one uncredited
+                                       exchange; no event is lost between
+                                       segment end and shutdown
     """
     from jax.experimental.shard_map import shard_map
 
@@ -450,43 +481,89 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
     init_pending, init_link, body, drain = make_pipeline_fns(
         cfg, axis_name=axis_name)
 
-    def shard_fn(state, dest, guid, mcast, w_e, w_i, dl, bgr, n_windows):
+    def seg_fn(carry: SimCarry, dest, guid, mcast, w_e, w_i, dl, bgr,
+               n_windows):
         tables = RoutingTables(dest[0], guid[0], mcast[0])
-        st = jax.tree_util.tree_map(lambda x: x[0], state)
+        st, pend, lstate = jax.tree_util.tree_map(lambda x: x[0], carry)
 
-        def win(carry, _):
-            return body(carry, tables, w_e[0], w_i[0], dl[0], bgr[0],
+        def win(c, _):
+            return body(c, tables, w_e[0], w_i[0], dl[0], bgr[0],
                         bg_weight)
 
         (st, pend, lstate), stats = jax.lax.scan(
-            win, (st, init_pending(), init_link()), None, length=n_windows)
-        # flush the final window's buckets (one extra decode step)
-        st, miss_d = drain(st, pend, lstate, w_e[0], w_i[0])
-        if n_windows > 0:
-            stats = stats._replace(
-                deadline_miss=stats.deadline_miss.at[-1].add(miss_d))
-        return (jax.tree_util.tree_map(lambda x: x[None], st),
+            win, (st, pend, lstate), None, length=n_windows)
+        return (jax.tree_util.tree_map(lambda x: x[None],
+                                       SimCarry(st, pend, lstate)),
                 jax.tree_util.tree_map(lambda x: x[None], stats))
 
+    def fin_fn(carry: SimCarry, w_e, w_i):
+        st, pend, lstate = jax.tree_util.tree_map(lambda x: x[0], carry)
+        st, miss_d = drain(st, pend, lstate, w_e[0], w_i[0])
+        return (jax.tree_util.tree_map(lambda x: x[None], st),
+                miss_d[None])
+
     spec = P(axis_name)
-    specs = (spec,) * 8
 
-    def run(state, n_windows: int):
+    @functools.lru_cache(maxsize=None)
+    def _compiled_segment(n_windows: int):
         fn = shard_map(
-            functools.partial(shard_fn, n_windows=n_windows),
-            mesh=mesh, in_specs=specs, out_specs=spec, check_rep=False)
-        return jax.jit(fn)(state, dest_t, guid_t, mcast_t, w_exc, w_inh,
-                           delays, bg)
+            functools.partial(seg_fn, n_windows=n_windows),
+            mesh=mesh, in_specs=(spec,) * 8, out_specs=(spec, spec),
+            check_rep=False)
+        return jax.jit(fn)
 
-    def init(seed: int = 0):
+    def run_segment(carry: SimCarry, n_windows: int):
+        return _compiled_segment(n_windows)(
+            carry, dest_t, guid_t, mcast_t, w_exc, w_inh, delays, bg)
+
+    fin = jax.jit(shard_map(fin_fn, mesh=mesh, in_specs=(spec,) * 3,
+                            out_specs=(spec, spec), check_rep=False))
+
+    def finish(carry: SimCarry):
+        return fin(carry, w_exc, w_inh)
+
+    def init(seed: int = 0) -> SimCarry:
         keys = jax.random.split(jax.random.PRNGKey(seed), S)
         neuron = jax.vmap(lambda k: lif.init_state(per, cfg.params, k))(keys)
-        return ShardState(
+        state = ShardState(
             neuron=neuron,
             ring_exc=jnp.zeros((S, cfg.ring_len, per), jnp.float32),
             ring_inh=jnp.zeros((S, cfg.ring_len, per), jnp.float32),
             t=jnp.zeros((S,), jnp.int32),
             key=jax.vmap(jax.random.PRNGKey)(jnp.arange(S) + seed * 1000 + 7),
         )
+        # pending/link start identical on every shard: broadcast host-side
+        bcast = lambda a: jnp.broadcast_to(a[None], (S,) + a.shape)
+        return SimCarry(state,
+                        jax.tree_util.tree_map(bcast, init_pending()),
+                        jax.tree_util.tree_map(bcast, init_link()))
+
+    return init, run_segment, finish
+
+
+def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
+                      bg_rates: np.ndarray, bg_weight: float = 87.8):
+    """Jitted multi-window simulator over a device mesh (whole-run form,
+    composed from :func:`build_sharded_segments`: one segment + finish).
+
+    Returns (init_fn(seed) -> stacked ShardState, run_fn(state, n_windows)
+    -> (state, stacked WindowStats over windows)).
+    """
+    seg_init, run_segment, finish = build_sharded_segments(
+        mesh, axis_name, cfg, part, bg_rates, bg_weight)
+    fresh = seg_init(0)        # pending/link halves are seed-independent
+
+    def init(seed: int = 0):
+        return seg_init(seed).state
+
+    def run(state, n_windows: int):
+        carry, stats = run_segment(
+            SimCarry(state, fresh.pending, fresh.link), n_windows)
+        state, miss_d = finish(carry)
+        if n_windows > 0:
+            # the final flush's deadline misses land on the last window
+            stats = stats._replace(
+                deadline_miss=stats.deadline_miss.at[:, -1].add(miss_d))
+        return state, stats
 
     return init, run

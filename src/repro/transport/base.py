@@ -88,6 +88,17 @@ class FabricState(NamedTuple):
 
     ``alltoall`` and unthrottled torus runs carry zero-size tables; the
     pytree *structure* stays uniform across backends.
+
+    The multi-tenant transport (``repro.transport.torus.
+    TenantTorusTransport``) reuses the same structure with a leading
+    tenant axis on the row tables — ``parked_count[t, s, d]`` — a bank of
+    ``(T+1) * K`` partition slots (``repro.core.flow_control.
+    CreditPartition``), and one extra table: ``parked_hold_shared[t, s,
+    d]`` records how many of the row's held arrival-link units were drawn
+    from the shared best-effort pool rather than tenant ``t``'s reserved
+    slice, so releasing the hold refunds the right partition slot.
+    Single-tenant fabrics keep the table all-zero (everything is "the one
+    slice").
     """
 
     bank: CreditBank
@@ -97,7 +108,12 @@ class FabricState(NamedTuple):
                                 #   (1 on entry; drives the park-dwell
                                 #   latency charge at delivery)
     parked_by_link: jax.Array   # (K,) i32 events holding each link's credits
+                                #   (one slot per PARTITION slot when
+                                #   multi-tenant: ``(T+1)*K``)
     parked_payload: jax.Array   # (n, W) u32 my rows' parked wire words
+    parked_hold_shared: jax.Array  # i32, ``parked_count``-shaped: units of
+                                #   the held credit drawn from the shared
+                                #   pool (multi-tenant only; else zeros)
 
 
 # Carried per-link flow-control state.  ``alltoall`` uses a zero-link bank
@@ -116,6 +132,7 @@ def init_fabric_state(bank: CreditBank, n_rows: int = 0,
         parked_age=jnp.zeros((n_rows, n_rows), jnp.int32),
         parked_by_link=jnp.zeros((n_links,), jnp.int32),
         parked_payload=jnp.zeros((n_rows, payload_width), jnp.uint32),
+        parked_hold_shared=jnp.zeros((n_rows, n_rows), jnp.int32),
     )
 
 

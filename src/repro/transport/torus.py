@@ -444,10 +444,19 @@ class TorusTransport(base.Transport):
 
     # -- one bidirectional ring phase --------------------------------------
     def _ring_phase(self, bundles, axis_name, my_c, n, perm_p, perm_m,
-                    acc: dict, phase: int):
+                    acc: dict, phase: int,
+                    count_cols: tuple[int, ...] = (-1,)):
         """Rotate (n, B, W1) count-packed bundles (indexed by target ring
         coordinate) to their owners; returns them indexed by *source* ring
-        coordinate.  ``acc`` accumulates LinkStats terms across phases."""
+        coordinate.  ``acc`` accumulates LinkStats terms across phases.
+
+        ``count_cols`` names the bitcast-i32 count columns inside each
+        bundle row: a single-tenant row is one frame train with its count
+        in the last column; a multi-tenant row concatenates one
+        count-packed sub-row per tenant, each its own frame train on the
+        wire (tenants are separate logical streams), so byte/occupancy
+        accounting sums over every tenant's count column.
+        """
         coord = jnp.arange(n)
         fwd = (coord - my_c) % n
         plus = (fwd >= 1) & (fwd <= n // 2)
@@ -456,19 +465,23 @@ class TorusTransport(base.Transport):
         vm = jnp.where(minus[:, None, None], bundles, jnp.uint32(0))
         recv = jnp.zeros_like(bundles)
         recv = recv.at[my_c].set(jnp.take(bundles, my_c, axis=0))
+        cols = jnp.asarray(
+            np.asarray(count_cols, np.int32) % bundles.shape[-1])
+
+        def bundle_counts(v):        # (n, B, n_cols) i32
+            return lax.bitcast_convert_type(v[:, :, cols], jnp.int32)
 
         def live_events(v):
-            return jnp.sum(lax.bitcast_convert_type(v[:, :, -1], jnp.int32))
+            return jnp.sum(bundle_counts(v))
 
         def wire(v):
-            cnt = lax.bitcast_convert_type(v[:, :, -1], jnp.int32)
-            return aggregator.window_cost(cnt.reshape(-1)).bytes
+            return aggregator.window_cost(bundle_counts(v).reshape(-1)).bytes
 
         def owire(v):
-            # exact frame-level bytes of this hop: every bundle row is one
-            # frame train of the backend's WireFormat profile
-            cnt = lax.bitcast_convert_type(v[:, :, -1], jnp.int32)
-            return jnp.sum(wire_framing.frame_bytes(self.wire_fmt, cnt))
+            # exact frame-level bytes of this hop: every count-packed
+            # sub-row is one frame train of the backend's WireFormat
+            return jnp.sum(wire_framing.frame_bytes(self.wire_fmt,
+                                                    bundle_counts(v)))
 
         for direction, v, perm, n_hops in (
             ("+", vp, perm_p, n // 2),
@@ -562,6 +575,7 @@ class TorusTransport(base.Transport):
                 parked_by_link=adm.parked_by_link,
                 parked_payload=jnp.where(fresh_p[:, None], payload,
                                          state.parked_payload),
+                parked_hold_shared=jnp.zeros_like(adm.park_count),
             )
             sent_mask = fresh_c | fresh_p | is_local | (counts == 0)
             sent_now = fresh_c | is_local | (counts == 0)
@@ -709,6 +723,7 @@ class TorusTransport(base.Transport):
             parked_age=jnp.zeros_like(state.parked_age),
             parked_by_link=jnp.zeros_like(state.parked_by_link),
             parked_payload=jnp.zeros_like(state.parked_payload),
+            parked_hold_shared=jnp.zeros_like(state.parked_hold_shared),
         )
         remaining_links = jnp.maximum(self._hops_matrix[me] - ph_me, 0)
         owire = jnp.sum(
@@ -798,3 +813,553 @@ class Torus3DTransport(TorusTransport):
                          max_row_events=max_row_events,
                          wire_format=wire_format)
         self.nx, self.ny, self.nz = nx, ny, nz
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant torus: N concurrent experiments on one fabric with per-tenant
+# QoS credit partitioning (the serving substrate of ``repro.serve``).
+# ---------------------------------------------------------------------------
+
+class TenantAdmissionOut(NamedTuple):
+    """Tenant-axis admission replay result; (T, n, n) fields are
+    (tenant, src, dst), slot arrays are ``(T+1)*K``."""
+
+    fresh_complete: jax.Array
+    fresh_park: jax.Array
+    resumed_complete: jax.Array
+    resume_age: jax.Array
+    stall_hop: jax.Array
+    park_count: jax.Array
+    park_hop: jax.Array
+    park_age: jax.Array
+    hold_shared: jax.Array       # (T, n, n) post-window shared-pool holds
+    parked_by_link: jax.Array    # ((T+1)*K,) post-window held units per slot
+    links_traversed: jax.Array
+    spent: jax.Array             # ((T+1)*K,)
+    notify: jax.Array            # ((T+1)*K,)
+    queue_events: jax.Array      # (T, n, n) parked events queued ahead
+
+
+class TenantTorusTransport(TorusTransport):
+    """Torus exchange multiplexing T tenants with partitioned credits.
+
+    Same fabric, same dimension-ordered routes, same store-and-forward
+    ring phases — but every physical link's credit budget is split by a
+    :class:`repro.core.flow_control.CreditPartition` into one guaranteed
+    slice per tenant plus a shared best-effort pool, realised as a bank
+    of ``(T+1) * K`` slots that ``credit_tick`` advances unmodified.
+
+    Admission discipline on top of the single-tenant rules (see
+    :class:`TorusTransport`):
+
+    * **Reserved-first spending** — a row of tenant ``t`` crossing link
+      ``l`` draws ``min(count, slice)`` from slot ``t*K + l`` and the
+      remainder from the shared slot ``T*K + l``; it is admitted across a
+      link iff slice + shared cover the full count.  No tenant can draw
+      another tenant's slice, so tenant ``t`` is guaranteed
+      ``reserve[t] // max(notify_latency, 1)`` events per link per window
+      of sustained admission regardless of co-tenant congestion — the
+      QoS floor ``BENCH_serve.json`` pins.
+    * **(tenant, source) round-robin rotation** — the canonical order
+      walks rows combined-index-major, ``(t*n + s)`` rotated by the
+      bank's progress epoch, so priority alternates over tenants as well
+      as sources: bounded starvation in both axes.
+    * **Per-tenant egress FIFOs** — a deferred row head-of-line blocks
+      only its OWN tenant's later rows on that egress link (each tenant
+      has its own injection queue at the NIC, as with Extoll VPIDs); the
+      co-tenant's traffic on the same link is judged purely on credits.
+    * **Holds release to the right slot** — a parked row's held
+      arrival-link credit remembers its reserved/shared split
+      (``FabricState.parked_hold_shared``) and refunds accordingly on
+      departure, so per-slot conservation
+      ``credits + pending + parked_by_link == slot_limit`` holds for all
+      ``(T+1)*K`` slots.
+
+    Payloads/counts carry a leading tenant axis — ``payload (T, n, W)``,
+    ``counts (T, n)`` — and every ``TransportOut`` field comes back with
+    the same leading axis (``stats`` fields are per-tenant; fabric-level
+    fields that have no per-tenant decomposition — hops, forwarded_bytes,
+    max_in_flight — are attributed to tenant slot 0 so tenant-axis sums
+    remain physical).  On the wire the T tenants' sub-rows of one
+    destination travel in the same ring-phase bundle but as separate
+    count-packed frame trains (separate logical streams).
+    """
+
+    name = "torus_tenant"
+
+    def __init__(self, n_shards: int, dims: tuple[int, ...], *,
+                 partition: fc.CreditPartition, notify_latency: int = 2,
+                 max_row_events: int = 0,
+                 wire_format: str | wire_framing.WireFormat = "extoll"):
+        if partition.limit <= 0:
+            raise ValueError("tenant partitioning needs link_credits > 0 "
+                             "(an unthrottled fabric has nothing to split)")
+        if max_row_events > 0:
+            for t, r in enumerate(partition.reserve):
+                if r + partition.shared < max_row_events:
+                    raise ValueError(
+                        f"tenant {t}: reserve ({r}) + shared "
+                        f"({partition.shared}) < largest bucket row "
+                        f"({max_row_events}): its biggest row could never "
+                        f"be admitted and would head-of-line-block forever")
+        super().__init__(n_shards, dims, link_credits=partition.limit,
+                         notify_latency=notify_latency,
+                         max_row_events=max_row_events,
+                         wire_format=wire_format)
+        self.partition = partition
+        self.n_tenants = partition.n_tenants
+
+    # -- flow-control state ------------------------------------------------
+    def init_state(self, payload_width: int = 0) -> base.LinkState:
+        """Partitioned bank + tenant-axis transit tables."""
+        T, n = self.n_tenants, self.n_shards
+        K = n * self.n_links
+        bank = fc.init_partitioned_credits(self.partition, K,
+                                           self.notify_latency)
+        return base.FabricState(
+            bank=bank,
+            parked_count=jnp.zeros((T, n, n), jnp.int32),
+            parked_hop=jnp.zeros((T, n, n), jnp.int32),
+            parked_age=jnp.zeros((T, n, n), jnp.int32),
+            parked_by_link=jnp.zeros(((T + 1) * K,), jnp.int32),
+            parked_payload=jnp.zeros((T, n, payload_width), jnp.uint32),
+            parked_hold_shared=jnp.zeros((T, n, n), jnp.int32),
+        )
+
+    def _allgather_counts_mt(self, counts: jax.Array, me, axis_name: str):
+        """(T, n) per-shard offered counts -> (T, n, n) global tensor,
+        same dimension-wise ring all-gather as the single-tenant path."""
+        n, T = self.n_shards, self.n_tenants
+        acc = jnp.zeros((n, T, n), jnp.int32).at[me].set(counts)
+        for a in range(self.ndim):
+            token = acc
+            perm_p, _ = self._perm[a]
+            for _ in range(self.dims[a] - 1):
+                token = lax.ppermute(token, axis_name, perm_p)
+                acc = acc + token
+        return acc.transpose(1, 0, 2)
+
+    # -- tenant-aware canonical admission ----------------------------------
+    def _admit_tenants(self, state: base.FabricState,
+                       counts_all: jax.Array) -> TenantAdmissionOut:
+        """Deterministic replay over ``T * n^2`` rows with reserved-first
+        spending.  Same two phases as ``_admit_global`` — parked rows
+        resume first, fresh offers second — with three per-tenant twists:
+        availability on a link is ``slice + shared``, spends/holds are
+        split reserved-first across the two slots, and the HOL ``blocked``
+        array is per (tenant, egress link).
+        """
+        n, T, H = self.n_shards, self.n_tenants, self.max_hops
+        K = n * self.n_links
+        flat = counts_all.reshape(-1)                   # (T*n²,)
+        pc0 = state.parked_count.reshape(-1)
+        ph0 = state.parked_hop.reshape(-1)
+        pa0 = state.parked_age.reshape(-1)
+        hs0 = state.parked_hold_shared.reshape(-1)
+        r_all = jnp.arange(T * n * n)
+        # round-robin over the combined (tenant, source) index
+        comb = (r_all // n + state.bank.epoch) % (T * n)
+        rows = comb * n + r_all % n
+        hop_idx = jnp.arange(H)
+
+        # congestion snapshot over PHYSICAL links (a queued event delays
+        # everyone crossing that link, whatever slot funded it)
+        pbl_phys = state.parked_by_link.reshape(T + 1, K).sum(0)
+        valid_all = self._link_seq >= 0                  # (n², H)
+        idx_all = jnp.maximum(self._link_seq, 0)
+        pair_all = jnp.arange(T * n * n) % (n * n)
+        start_hop = jnp.where(pc0 > 0, ph0, 0)[:, None]
+        queue_events = jnp.sum(
+            jnp.where(valid_all[pair_all]
+                      & (jnp.arange(H)[None, :] >= start_hop),
+                      pbl_phys[idx_all[pair_all]], 0),
+            axis=-1).reshape(T, n, n)
+
+        def split_spend(remaining, t, idx, trav, c):
+            """Reserved-first draw of ``c`` units at each traversed link;
+            returns (remaining', take_r, take_s) with per-hop splits."""
+            slot_r = t * K + idx
+            slot_s = T * K + idx
+            take_r = jnp.where(trav, jnp.minimum(c, remaining[slot_r]), 0)
+            take_s = jnp.where(trav, c - take_r, 0)
+            remaining = remaining.at[slot_r].add(-take_r)
+            remaining = remaining.at[slot_s].add(-take_s)
+            return remaining, take_r, take_s
+
+        def resume(carry, r):
+            remaining, notify, pbl = carry
+            t = r // (n * n)
+            pair = r % (n * n)
+            c, h, hs = pc0[r], ph0[r], hs0[r]
+            active = c > 0
+            seq = self._link_seq[pair]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = self._route_len[pair]
+            avail = remaining[t * K + idx] + remaining[T * K + idx]
+            short = valid & (hop_idx >= h) & (avail < c)
+            h_new = jnp.min(jnp.where(short, hop_idx, H))
+            complete = active & (h_new >= L)
+            h_stop = jnp.maximum(jnp.where(complete, L, h_new), h)
+            moved = active & (h_stop > h)
+            trav = valid & (hop_idx >= h) & (hop_idx < h_stop) & active
+            remaining, take_r, take_s = split_spend(remaining, t, idx,
+                                                    trav, c)
+            new_hold = moved & ~complete
+            at_hold = new_hold & (hop_idx == h_stop - 1)
+            notify = notify.at[t * K + idx].add(
+                jnp.where(at_hold, 0, take_r))
+            notify = notify.at[T * K + idx].add(
+                jnp.where(at_hold, 0, take_s))
+            pbl = pbl.at[t * K + idx].add(jnp.where(at_hold, take_r, 0))
+            pbl = pbl.at[T * K + idx].add(jnp.where(at_hold, take_s, 0))
+            hs_new = jnp.sum(jnp.where(at_hold, take_s, 0))
+            # departing the old park spot releases its held arrival
+            # credit back to the slots that funded it
+            oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
+            rel_s = jnp.where(moved, hs, 0)
+            rel_r = jnp.where(moved, c, 0) - rel_s
+            notify = notify.at[t * K + oh].add(rel_r)
+            notify = notify.at[T * K + oh].add(rel_s)
+            pbl = pbl.at[t * K + oh].add(-rel_r)
+            pbl = pbl.at[T * K + oh].add(-rel_s)
+            keep = active & ~complete
+            out = (complete, jnp.where(complete, 0, c),
+                   jnp.where(keep, h_stop, 0),
+                   jnp.where(complete, pa0[r], 0),
+                   jnp.where(keep, pa0[r] + 1, 0),
+                   jnp.sum(trav.astype(jnp.int32)),
+                   jnp.where(keep, jnp.where(moved, hs_new, hs), 0))
+            return (remaining, notify, pbl), out
+
+        S = (T + 1) * K
+        carry = (state.bank.credits, jnp.zeros((S,), jnp.int32),
+                 state.parked_by_link)
+        carry, (res_c, pc_a, ph_a, age_res, age_a, trav_a, hs_a) = lax.scan(
+            resume, carry, rows)
+
+        def offer(carry, r):
+            remaining, notify, pbl, blocked = carry
+            t = r // (n * n)
+            pair = r % (n * n)
+            c = flat[r]
+            seq = self._link_seq[pair]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = self._route_len[pair]
+            fl = seq[0]
+            routed = (fl >= 0) & (c > 0)
+            slot_busy = pc0[r] > 0
+            bl_idx = t * K + jnp.maximum(fl, 0)
+            hol = blocked[bl_idx]
+            avail = remaining[t * K + idx] + remaining[T * K + idx]
+            short = valid & (avail < c)
+            h_block = jnp.min(jnp.where(short, hop_idx, H))
+            ok = routed & ~slot_busy & ~hol
+            admit_c = ok & (h_block >= L)
+            admit_p = ok & (h_block < L) & (h_block >= 1)
+            defer = routed & ~admit_c & ~admit_p
+            h_stop = jnp.where(admit_c, L, jnp.where(admit_p, h_block, 0))
+            trav = valid & (hop_idx < h_stop)
+            remaining, take_r, take_s = split_spend(remaining, t, idx,
+                                                    trav, c)
+            at_hold = admit_p & (hop_idx == h_stop - 1)
+            notify = notify.at[t * K + idx].add(
+                jnp.where(at_hold, 0, take_r))
+            notify = notify.at[T * K + idx].add(
+                jnp.where(at_hold, 0, take_s))
+            pbl = pbl.at[t * K + idx].add(jnp.where(at_hold, take_r, 0))
+            pbl = pbl.at[T * K + idx].add(jnp.where(at_hold, take_s, 0))
+            blocked = blocked.at[bl_idx].set(hol | defer)
+            out = (admit_c, admit_p, jnp.where(defer, 0, -1), h_stop,
+                   jnp.sum(trav.astype(jnp.int32)),
+                   jnp.sum(jnp.where(at_hold, take_s, 0)))
+            return (remaining, notify, pbl, blocked), out
+
+        carry = (*carry, jnp.zeros((T * K,), bool))
+        (remaining, notify, pbl, _), \
+            (adm_c, adm_p, stall, hp_b, trav_b, hs_b) = lax.scan(
+                offer, carry, rows)
+
+        def unrot(x, fill, dtype):
+            return jnp.full((T * n * n,), fill, dtype).at[rows].set(x)
+
+        fresh_complete = unrot(adm_c, False, bool)
+        fresh_park = unrot(adm_p, False, bool)
+        park_count = jnp.where(fresh_park, flat, unrot(pc_a, 0, jnp.int32))
+        park_hop = jnp.where(fresh_park, unrot(hp_b, 0, jnp.int32),
+                             unrot(ph_a, 0, jnp.int32))
+        park_age = jnp.where(fresh_park, 1, unrot(age_a, 0, jnp.int32))
+        hold_shared = jnp.where(fresh_park, unrot(hs_b, 0, jnp.int32),
+                                unrot(hs_a, 0, jnp.int32))
+        links_traversed = (unrot(trav_a, 0, jnp.int32)
+                           + unrot(trav_b, 0, jnp.int32))
+        shape3 = (T, n, n)
+        return TenantAdmissionOut(
+            fresh_complete=fresh_complete.reshape(shape3),
+            fresh_park=fresh_park.reshape(shape3),
+            resumed_complete=unrot(res_c, False, bool).reshape(shape3),
+            resume_age=unrot(age_res, 0, jnp.int32).reshape(shape3),
+            stall_hop=unrot(stall, -1, jnp.int32).reshape(shape3),
+            park_count=park_count.reshape(shape3),
+            park_hop=park_hop.reshape(shape3),
+            park_age=park_age.reshape(shape3),
+            hold_shared=hold_shared.reshape(shape3),
+            parked_by_link=pbl,
+            links_traversed=links_traversed.reshape(shape3),
+            spent=state.bank.credits - remaining,
+            notify=notify,
+            queue_events=queue_events,
+        )
+
+    # -- tenant bundle packing ---------------------------------------------
+    def _pack_tenants(self, row_payload: jax.Array,
+                      cnt_in: jax.Array) -> jax.Array:
+        """(T, n, W) payload + (T, n) counts -> (n, T*(W+1)) bundles:
+        per destination row, T count-packed sub-rows side by side."""
+        packed = base.pack_payload(row_payload, cnt_in)    # (T, n, W+1)
+        n = packed.shape[1]
+        return packed.transpose(1, 0, 2).reshape(n, -1)
+
+    def _unpack_tenants(self, buf: jax.Array):
+        """Inverse of :meth:`_pack_tenants` -> ((T, n, W), (T, n))."""
+        n = buf.shape[0]
+        T = self.n_tenants
+        packed = buf.reshape(n, T, -1).transpose(1, 0, 2)
+        return base.unpack_payload(packed)
+
+    def _tenant_count_cols(self, width: int) -> tuple[int, ...]:
+        return tuple(t * (width + 1) + width for t in range(self.n_tenants))
+
+    def _ship_rotation(self, packed_bundles: jax.Array, me, axis_name: str,
+                       acc: dict, count_cols: tuple[int, ...]):
+        my_c = self._coords_of(me)
+        buf = packed_bundles
+        for a in range(self.ndim):
+            bundles = self._to_phase(buf, a)
+            perm_p, perm_m = self._perm[a]
+            recv = self._ring_phase(bundles, axis_name, my_c[a],
+                                    self.dims[a], perm_p, perm_m, acc,
+                                    phase=a, count_cols=count_cols)
+            buf = self._from_phase(recv, a)
+        return self._unpack_tenants(buf)
+
+    @staticmethod
+    def _fresh_acc(ndim: int) -> dict:
+        return {"bytes": jnp.int32(0), "owire": jnp.int32(0), "hops": 0,
+                "in_flight": jnp.int32(0),
+                "in_flight_phase": [jnp.int32(0)] * ndim}
+
+    def _by_hop(self, hop: jax.Array, weight: jax.Array) -> jax.Array:
+        """Scatter (T, n) weights into (T, max_hops) hop histograms."""
+        T, H = self.n_tenants, self.max_hops
+        return jnp.zeros((T, H), jnp.int32).at[
+            jnp.arange(T)[:, None], jnp.clip(hop, 0, H - 1)
+        ].add(weight)
+
+    def _fabric_level(self, acc: dict):
+        """Fabric-wide (non-decomposable) stats attributed to tenant 0 so
+        tenant-axis sums stay physical."""
+        T = self.n_tenants
+        z = jnp.zeros((T,), jnp.int32)
+        return (z.at[0].set(acc["hops"]),
+                z.at[0].set(acc["bytes"].astype(jnp.int32)),
+                z.at[0].set(acc["in_flight"].astype(jnp.int32)),
+                jnp.zeros((T, self.ndim), jnp.int32).at[0].set(
+                    jnp.stack(acc["in_flight_phase"])))
+
+    # -- the full multi-tenant window --------------------------------------
+    def exchange(self, state: base.LinkState, payload: jax.Array,
+                 counts: jax.Array, *, axis_name: str,
+                 enforce_credits: bool = True) -> base.TransportOut:
+        """Ship one window for every tenant: ``payload (T, n, W)``,
+        ``counts (T, n)``; every output field has a leading tenant axis."""
+        T, n, H = self.n_tenants, self.n_shards, self.max_hops
+        me = lax.axis_index(axis_name)
+        counts = counts.astype(jnp.int32)
+        if payload.shape[:2] != (T, n) or counts.shape != (T, n):
+            raise ValueError(
+                f"tenant transport wants payload (T={T}, n={n}, W) and "
+                f"counts (T, n); got {payload.shape} / {counts.shape}")
+        is_local = (jnp.arange(n) == me)[None, :]
+        zero_q = jnp.zeros((T, n, n), jnp.float32)
+
+        if enforce_credits:
+            if state.parked_payload.shape != payload.shape:
+                raise ValueError(
+                    f"FabricState payload buffer "
+                    f"{state.parked_payload.shape} != offered payload "
+                    f"{payload.shape}: initialize with "
+                    f"init_state(payload_width=W)")
+            counts_all = self._allgather_counts_mt(counts, me, axis_name)
+            adm = self._admit_tenants(state, counts_all)
+            fresh_c = adm.fresh_complete[:, me]          # (T, n)
+            fresh_p = adm.fresh_park[:, me]
+            resumed = adm.resumed_complete[:, me]
+            stall_hop = adm.stall_hop[:, me]
+            pc0_me = state.parked_count[:, me]
+            ship_fresh = fresh_c | (is_local & (counts > 0))
+            cnt_in = (jnp.where(ship_fresh, counts, 0)
+                      + jnp.where(resumed, pc0_me, 0))
+            row_payload = jnp.where(
+                resumed[..., None], state.parked_payload,
+                jnp.where(ship_fresh[..., None], payload, jnp.uint32(0)))
+            bank = fc.credit_tick(state.bank, adm.spent, notify=adm.notify)
+            state = base.FabricState(
+                bank=bank,
+                parked_count=adm.park_count,
+                parked_hop=adm.park_hop,
+                parked_age=adm.park_age,
+                parked_by_link=adm.parked_by_link,
+                parked_payload=jnp.where(fresh_p[..., None], payload,
+                                         state.parked_payload),
+                parked_hold_shared=adm.hold_shared,
+            )
+            sent_mask = fresh_c | fresh_p | is_local | (counts == 0)
+            sent_now = fresh_c | is_local | (counts == 0)
+            queue_us = wire_latency.queueing_latency_us(
+                self.wire_fmt, adm.queue_events)
+            park_wait_us = wire_latency.queueing_latency_us(
+                self.wire_fmt, adm.resume_age * self.link_credits)
+        else:
+            fresh_p = resumed = jnp.zeros((T, n), bool)
+            pc0_me = jnp.zeros((T, n), jnp.int32)
+            stall_hop = jnp.full((T, n), -1, jnp.int32)
+            cnt_in = counts
+            row_payload = payload
+            state = state._replace(bank=fc.credit_tick(
+                state.bank, jnp.zeros_like(state.bank.credits)))
+            sent_mask = sent_now = jnp.ones((T, n), bool)
+            queue_us = park_wait_us = zero_q
+
+        acc = self._fresh_acc(self.ndim)
+        w = payload.shape[-1]
+        recv_payload, recv_counts = self._ship_rotation(
+            self._pack_tenants(row_payload, cnt_in), me, axis_name, acc,
+            self._tenant_count_cols(w))
+
+        stalled_by_hop = self._by_hop(
+            stall_hop, jnp.where(stall_hop >= 0, counts, 0))
+        offered = jnp.sum(counts, axis=-1)
+        if enforce_credits:
+            sent = jnp.sum(jnp.where(sent_now, counts, 0), axis=-1)
+            parked = jnp.sum(jnp.where(fresh_p, counts, 0), axis=-1)
+            unparked = jnp.sum(jnp.where(resumed, pc0_me, 0), axis=-1)
+            pk_cnt, pk_hop = state.parked_count[:, me], state.parked_hop[:, me]
+            parked_by_hop = self._by_hop(pk_hop, pk_cnt)
+            c_row = jnp.where(resumed, pc0_me, counts)
+            owire = jnp.sum(
+                wire_framing.frame_bytes(self.wire_fmt, c_row)
+                * adm.links_traversed[:, me], axis=-1).astype(jnp.int32)
+            dwell = jnp.sum(jnp.where(
+                fresh_c | resumed,
+                queue_us[:, me] + park_wait_us[:, me], 0.0),
+                axis=-1).astype(jnp.float32)
+            in_fabric = jnp.sum(pk_cnt, axis=-1).astype(jnp.int32)
+        else:
+            sent = jnp.sum(cnt_in, axis=-1)
+            parked = unparked = jnp.zeros((T,), jnp.int32)
+            parked_by_hop = jnp.zeros((T, H), jnp.int32)
+            owire = jnp.zeros((T,), jnp.int32).at[0].set(
+                acc["owire"].astype(jnp.int32))
+            dwell = jnp.zeros((T,), jnp.float32)
+            in_fabric = (jnp.sum(state.parked_count[:, me], axis=-1)
+                         .astype(jnp.int32) if state.parked_count.size
+                         else jnp.zeros((T,), jnp.int32))
+        hops_f, bytes_f, inflight_f, inflight_ph = self._fabric_level(acc)
+        stats = base.LinkStats(
+            offered_events=offered.astype(jnp.int32),
+            sent_events=sent.astype(jnp.int32),
+            deferred_events=(offered - sent - parked).astype(jnp.int32),
+            delivered_events=jnp.sum(recv_counts, axis=-1).astype(jnp.int32),
+            credit_stalls=jnp.sum(stall_hop >= 0, axis=-1).astype(jnp.int32),
+            hops=hops_f,
+            forwarded_bytes=bytes_f,
+            bytes_on_wire=owire,
+            max_in_flight=inflight_f,
+            stalled_by_hop=stalled_by_hop,
+            max_in_flight_by_phase=inflight_ph,
+            parked_events=parked.astype(jnp.int32),
+            unparked_events=unparked.astype(jnp.int32),
+            in_fabric_events=in_fabric,
+            parked_by_hop=parked_by_hop,
+            queue_dwell_us=dwell,
+        )
+        return base.TransportOut(
+            state=state,
+            recv_payload=recv_payload,
+            recv_counts=recv_counts,
+            sent_mask=sent_mask,
+            stats=stats,
+            sent_now=sent_now,
+            queue_us=queue_us,
+            unparked_now=jnp.where(resumed, pc0_me, 0),
+            park_wait_us=park_wait_us,
+        )
+
+    # -- end-of-run fabric walk --------------------------------------------
+    def drain_fabric(self, state: base.LinkState, *, axis_name: str,
+                     payload_width: int | None = None) -> base.TransportOut:
+        """Tenant-axis fabric walk: every parked row of every tenant
+        resumes from its blocked hop and completes, all held credits
+        (reserved AND shared) release into their slots' delay lines —
+        per-slot conservation ``credits + pending == slot_limit`` is
+        restored and the returned tables are empty."""
+        T, n, H = self.n_tenants, self.n_shards, self.max_hops
+        me = lax.axis_index(axis_name)
+        pc_me = state.parked_count[:, me]                 # (T, n)
+        ph_me = state.parked_hop[:, me]
+        row_payload = jnp.where((pc_me > 0)[..., None],
+                                state.parked_payload, jnp.uint32(0))
+
+        acc = self._fresh_acc(self.ndim)
+        w = state.parked_payload.shape[-1]
+        recv_payload, recv_counts = self._ship_rotation(
+            self._pack_tenants(row_payload, pc_me), me, axis_name, acc,
+            self._tenant_count_cols(w))
+
+        bank = fc.credit_tick(state.bank,
+                              jnp.zeros_like(state.bank.credits),
+                              notify=state.parked_by_link)
+        new_state = base.FabricState(
+            bank=bank,
+            parked_count=jnp.zeros_like(state.parked_count),
+            parked_hop=jnp.zeros_like(state.parked_hop),
+            parked_age=jnp.zeros_like(state.parked_age),
+            parked_by_link=jnp.zeros_like(state.parked_by_link),
+            parked_payload=jnp.zeros_like(state.parked_payload),
+            parked_hold_shared=jnp.zeros_like(state.parked_hold_shared),
+        )
+        remaining_links = jnp.maximum(
+            self._hops_matrix[me][None, :] - ph_me, 0)
+        owire = jnp.sum(
+            wire_framing.frame_bytes(self.wire_fmt, pc_me)
+            * jnp.where(pc_me > 0, remaining_links, 0),
+            axis=-1).astype(jnp.int32)
+        hops_f, bytes_f, inflight_f, inflight_ph = self._fabric_level(acc)
+        z = jnp.zeros((T,), jnp.int32)
+        stats = base.LinkStats(
+            offered_events=z, sent_events=z, deferred_events=z,
+            delivered_events=jnp.sum(recv_counts, axis=-1).astype(jnp.int32),
+            credit_stalls=z,
+            hops=hops_f, forwarded_bytes=bytes_f, bytes_on_wire=owire,
+            max_in_flight=inflight_f,
+            stalled_by_hop=jnp.zeros((T, H), jnp.int32),
+            max_in_flight_by_phase=inflight_ph,
+            parked_events=z,
+            unparked_events=jnp.sum(pc_me, axis=-1).astype(jnp.int32),
+            in_fabric_events=z,
+            parked_by_hop=jnp.zeros((T, H), jnp.int32),
+            queue_dwell_us=jnp.zeros((T,), jnp.float32),
+        )
+        return base.TransportOut(
+            state=new_state,
+            recv_payload=recv_payload,
+            recv_counts=recv_counts,
+            sent_mask=jnp.ones((T, n), bool),
+            stats=stats,
+            sent_now=jnp.ones((T, n), bool),
+            queue_us=jnp.zeros((T, n, n), jnp.float32),
+            unparked_now=pc_me,
+            park_wait_us=jnp.zeros((T, n, n), jnp.float32),
+        )

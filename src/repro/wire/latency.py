@@ -90,6 +90,25 @@ def queueing_latency_us(fmt: WireFormat, queued_events) -> jax.Array:
     return frame_bytes(fmt, q).astype(jnp.float32) / fmt.bytes_per_us
 
 
+def percentile_from_hist(hist, q: float) -> float:
+    """Host-side quantile estimate from a ``LATENCY_BIN_EDGES_US``
+    histogram (run-level digests: per-window histograms merge by
+    addition, exact percentiles do not).
+
+    Returns the UPPER edge of the bin holding the ``ceil(q * total)``-th
+    event — a conservative over-estimate, tight to one 2x log bin.  The
+    open top bin reports twice the last edge; an empty histogram 0.
+    """
+    hist = np.asarray(hist)
+    total = int(hist.sum())
+    if total == 0:
+        return 0.0
+    thresh = max(int(np.ceil(q * total)), 1)
+    b = int(np.argmax(np.cumsum(hist) >= thresh))
+    edges = LATENCY_BIN_EDGES_US
+    return float(edges[b]) if b < len(edges) else float(edges[-1] * 2)
+
+
 def summarize_latency(lat_us: jax.Array, weights: jax.Array) -> LatencySummary:
     """Weighted digest of per-row (or per-event) latencies.
 

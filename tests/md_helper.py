@@ -15,10 +15,12 @@ SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 def run_md(code: str, n_devices: int = 8, timeout: int = 600) -> str:
     """Execute ``code`` with N fake devices; returns stdout; raises on rc!=0."""
+    # append to (not clobber) caller flags so tools/env.sh tuning survives
     prelude = (
         "import os\n"
         f"os.environ['XLA_FLAGS'] = "
-        f"'--xla_force_host_platform_device_count={n_devices}'\n"
+        f"'--xla_force_host_platform_device_count={n_devices} '"
+        f" + os.environ.get('XLA_FLAGS', '')\n"
     )
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")

@@ -1,0 +1,45 @@
+# Benchmark environment tuning. Source before running benchmarks:
+#
+#     . tools/env.sh && PYTHONPATH=src python -m benchmarks.run
+#
+# Every setting is additive and gated, so sourcing this on a machine
+# without the optional pieces (tcmalloc, OpenMP) is a no-op for them —
+# benchmarks run fine without it, just with more allocator/logging noise
+# in the timings.  POSIX sh; keep it bash-free.
+
+# tcmalloc: faster malloc for the host-side staging path (pinned double
+# buffers churn large numpy arrays every segment).  Only preload when the
+# library actually exists — a dangling LD_PRELOAD breaks every child
+# process, including the benchmark subprocesses.
+for _lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+            /usr/lib/libtcmalloc.so.4; do
+    if [ -r "$_lib" ]; then
+        LD_PRELOAD="$_lib${LD_PRELOAD:+:$LD_PRELOAD}"
+        export LD_PRELOAD
+        # silence per-allocation reports for the big staging buffers
+        export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+        break
+    fi
+done
+unset _lib
+
+# keep TF/XLA C++ chatter out of benchmark CSV output
+export TF_CPP_MIN_LOG_LEVEL=4
+
+# step markers at the outer while loop (vs entry): profiles attribute
+# time per scanned flush window instead of per run.  Older XLA spelled
+# this --xla_step_marker_location=1; current XLA takes the enum name.
+# APPEND to any caller-set flags — benchmark subprocesses add their own
+# --xla_force_host_platform_device_count on top of this variable.
+XLA_FLAGS="--xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP ${XLA_FLAGS:-}"
+export XLA_FLAGS
+
+# pin host threading: the serving engine runs its own ingest/device
+# threads, and an unbounded OpenMP pool under them oversubscribes cores
+# and adds run-to-run jitter to the sustained-rate rows.
+if [ -z "${OMP_NUM_THREADS:-}" ]; then
+    export OMP_NUM_THREADS=4
+fi
+
+# sentinel for benchmarks.run to report whether the env was sourced
+export REPRO_BENCH_ENV=1
