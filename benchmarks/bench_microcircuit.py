@@ -1,79 +1,137 @@
 """Paper §4 — the named target workload: multi-wafer cortical microcircuit.
 
-Measures the single-process simulation rate of the windowed simulator (one
-shard, no collective — wall time per biological second at reduced scale)
-and the communication profile (events, wire bytes, aggregation efficiency)
-per flush window.
+Runs the full windowed simulator (LIF dynamics + fused route/aggregate +
+credit-throttled torus3d exchange) on the reduced-scale cortical
+microcircuit over 8 forced host devices arranged as a 2x2x2 wafer torus,
+under a **fault matrix**: no-fault baseline, one cable permanently dead,
+a flapping cable, and a dropped wafer node (``repro.fabric.faults``).
+Each row of ``BENCH_microcircuit.json`` carries the measured
+biological-real-time slowdown, the delivery ratio, detour (reroute)
+counts and the p99 latency degradation against the no-fault baseline —
+the chaos-engineering counterpart of the paper's commissioning runs.
+
+Needs 8 devices, so the timed work runs in a subprocess with
+``xla_force_host_platform_device_count=8`` (the harness process has
+already initialized single-device jax), like ``bench_transport``.
 """
 from __future__ import annotations
 
-import time
+import json
+import os
+import subprocess
+import sys
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
-from repro.core import aggregator as agg
-from repro.snn import lif, microcircuit as mc, network
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+import json, sys, time
+import jax, numpy as np
+from repro.fabric import healthy, link_fault, link_flap, node_fault
+from repro.snn import microcircuit as mc, network, simulator as sim
+
+params = json.loads(sys.argv[1])
+scale, n_win, iters = params["scale"], params["windows"], params["iters"]
+cap, cred = params["capacity"], params["credits"]
+spec = mc.MicrocircuitSpec(scale=scale)
+w, is_inh = spec.weight_matrix()
+part = network.build_partition(w, is_inh, n_shards=8)
+mesh = jax.make_mesh((8,), ("wafer",))
+dims = (2, 2, 2)
+cfg = sim.SimConfig(n_shards=8, per_shard=part.per_shard,
+                    max_fan=part.fanout.shape[1], window=8, ring_len=32,
+                    e_max=512, capacity=cap, transport="torus3d",
+                    torus_nx=dims[0], torus_ny=dims[1], torus_nz=dims[2],
+                    link_credits=cred, notify_latency=2)
+# faults start at window 2 so the pipeline is warm when the cable dies
+matrix = [
+    ("no_fault",  healthy(dims, n_win)),
+    ("link_down", link_fault(dims, n_win, 0, 0, start=2)),
+    ("link_flap", link_flap(dims, n_win, 0, 0, period=2, start=2)),
+    ("node_down", node_fault(dims, n_win, 3, start=2)),
+]
+bio_s = n_win * cfg.window * cfg.params.dt * 1e-3     # dt is ms
+rows = []
+for name, sched in matrix:
+    init, run = sim.build_sharded_sim(mesh, "wafer", cfg, part,
+                                      spec.bg_rates(),
+                                      fault_schedule=sched)
+    st, stats = run(init(0), n_win)                   # compile + warmup
+    jax.block_until_ready((st, stats))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        st, stats = run(init(0), n_win)
+        jax.block_until_ready((st, stats))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    med_s = ts[len(ts) // 2]
+    s = jax.tree_util.tree_map(np.asarray, stats)
+    link = s.link
+    offered = int(link.offered_events.sum())
+    delivered = int(link.delivered_events.sum())
+    rows.append({
+        "fault": name,
+        "mesh": "%dx%dx%d" % dims,
+        "shape": "S=8 scale=%g W=%d C=%d credits=%d" % (scale, n_win,
+                                                        cap, cred),
+        "median_ms": med_s * 1e3 / n_win,
+        "events_per_s": delivered / med_s if med_s > 0 else 0.0,
+        "bio_slowdown": round(med_s / bio_s, 1),
+        "spikes": int(s.spikes.sum()),
+        "delivery_ratio": round(delivered / max(offered, 1), 4),
+        "rerouted": int(link.rerouted.sum()),
+        "parked": int(link.parked_events.sum()),
+        "deferred": int(link.deferred_events.sum()),
+        "deadline_miss": int(s.deadline_miss.sum()),
+        "latency_p99_us": round(float(s.latency.p99_us.max()), 3),
+    })
+base = rows[0]
+for r in rows:
+    r["p99_degradation"] = round(
+        r["latency_p99_us"] / max(base["latency_p99_us"], 1e-9), 3)
+    r["delivery_vs_healthy"] = round(
+        r["delivery_ratio"] / max(base["delivery_ratio"], 1e-9), 4)
+print("BENCH_JSON " + json.dumps(rows))
+'''
 
 
-def main(report):
-    spec = mc.MicrocircuitSpec(scale=0.004)
-    w, is_inh = spec.weight_matrix()
-    n = spec.n_neurons
-    report("microcircuit/neurons", n, f"scale={spec.scale}")
-    report("microcircuit/synapses", int((w != 0).sum()), "")
-
-    # single-shard LIF loop throughput (jit, steady state)
-    p = lif.LIFParams()
-    w_exc = jnp.asarray(np.where(~is_inh[None, :], w, 0.0))
-    w_inh = jnp.asarray(np.where(is_inh[None, :], w, 0.0))
-    bg = jnp.asarray(spec.bg_rates())
-
-    @jax.jit
-    def step(state, key):
-        exc_in = w_exc @ state[-1] + lif.poisson_input(key, n, bg, 87.8, p.dt)
-        inh_in = w_inh @ state[-1]
-        st = lif.LIFState(*state[:4])
-        st, spk = lif.step(st, p, exc_in, inh_in)
-        return (st.v, st.i_exc, st.i_inh, st.refrac,
-                spk.astype(jnp.float32)), spk
-
-    state = lif.init_state(n, p, jax.random.PRNGKey(0))
-    carry = (state.v, state.i_exc, state.i_inh, state.refrac,
-             jnp.zeros(n))
-    # warmup + timed
-    for i in range(10):
-        carry, _ = step(carry, jax.random.PRNGKey(i))
-    jax.block_until_ready(carry)
-    t0 = time.perf_counter()
-    spikes = 0
-    T = 200
-    for i in range(T):
-        carry, spk = step(carry, jax.random.PRNGKey(100 + i))
-        spikes += int(spk.sum())
-    jax.block_until_ready(carry)
-    dt_wall = time.perf_counter() - t0
-    us_per_step = dt_wall / T * 1e6
-    bio_ms = T * p.dt
-    report("microcircuit/us_per_dt_step", round(us_per_step, 1),
-           f"{dt_wall / (bio_ms / 1e3):.1f}x slower than biology at "
-           f"scale={spec.scale} (CPU)")
-    rate = spikes / (n * T * p.dt * 1e-3)
-    report("microcircuit/mean_rate_hz", round(rate, 1),
-           "reduced-scale dynamics (communication test, not rate-faithful)")
-
-    # communication profile per flush window (8 steps)
-    part = network.build_partition(w, is_inh, n_shards=4)
-    rates = np.full(part.n_neurons, rate)
-    traffic = network.traffic_matrix(part, rates)
-    report("microcircuit/cross_shard_Bps", round(float(traffic.sum()), 1),
-           f"4 shards; max pair={traffic.max():.1f}")
-    # window aggregation efficiency at this rate
-    ev_per_window = rate * 1e-3 * 0.8 * part.n_neurons  # 0.8ms window
-    counts = np.random.default_rng(0).multinomial(
-        max(int(ev_per_window), 1), np.ones(4) / 4)
-    cost = agg.window_cost(jnp.asarray(counts))
-    un = agg.unaggregated_cost(int(ev_per_window))
-    report("microcircuit/window_wire_eff", round(float(cost.efficiency), 3),
-           f"vs unaggregated {float(un.efficiency):.3f}")
+def main(report) -> None:
+    from repro.snn import microcircuit as mc
+    params = {
+        "scale": 0.003 if report.smoke else 0.01,
+        "windows": 8 if report.smoke else 40,
+        "iters": 1 if report.smoke else 3,
+        "capacity": 32 if report.smoke else 48,
+    }
+    # throttled to the bucket capacity: the admission invariant's floor
+    # and low enough that faults actually contend for detour credits
+    params["credits"] = params["capacity"]
+    spec = mc.MicrocircuitSpec(scale=params["scale"])
+    report("microcircuit/neurons", spec.n_neurons, f"scale={spec.scale}")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, json.dumps(params)],
+        capture_output=True, text=True, timeout=2400, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"bench_microcircuit subprocess failed:\n"
+            f"{out.stdout}\n{out.stderr}")
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][0]
+    for row in json.loads(line[len("BENCH_JSON "):]):
+        extra = {k: row[k] for k in (
+            "fault", "mesh", "bio_slowdown", "spikes", "delivery_ratio",
+            "delivery_vs_healthy", "rerouted", "parked", "deferred",
+            "deadline_miss", "latency_p99_us", "p99_degradation")}
+        report.bench(
+            "microcircuit", row["fault"],
+            f"mesh={row['mesh']} {row['shape']}",
+            row["median_ms"], row["events_per_s"],
+            notes=(f"bio x{row['bio_slowdown']} "
+                   f"delivery={row['delivery_ratio']} "
+                   f"rerouted={row['rerouted']}"),
+            extra=extra)

@@ -15,11 +15,12 @@ it was sourced (the ``REPRO_BENCH_ENV`` sentinel) in the CSV header.
 Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
 ``BENCH_<group>.json`` files (one JSON list of
 ``{op, shape, median_ms, events_per_s, ...}`` rows per group, currently
-``kernels``, ``link``, ``transport`` and ``wire``) so the perf trajectory
-across PRs can be diffed without parsing the CSV.
+``kernels``, ``link``, ``transport``, ``wire``, ``serve`` and
+``microcircuit``) so the perf trajectory across PRs can be diffed without
+parsing the CSV.
 
 ``--smoke`` runs a reduced module set with shrunk shapes — fast enough for
-the tier-1 time budget while still producing all four JSON files.  Smoke
+the tier-1 time budget while still producing all the JSON files.  Smoke
 rows are stamped ``"smoke": true`` and must NEVER be committed: the
 committed ``BENCH_*.json`` are full-shape numbers, and
 ``tools/check_docs.py`` fails CI if a smoke-stamped (or known
@@ -33,7 +34,11 @@ Modules:
   bench_link         paper §1 link budget / wafer torus loads
   bench_ringbuffer   paper §2.1 credit flow-control sizing
   bench_renaming     paper §3.1 bucket renaming pressure
-  bench_microcircuit paper §4 target workload
+  bench_microcircuit paper §4 target workload: the cortical microcircuit
+                     on a credit-throttled 2x2x2 wafer torus under a
+                     fault matrix (no-fault / link down / link flap /
+                     node down) — bio-real-time slowdown, delivery ratio
+                     and p99 degradation per fault case
   bench_moe_dispatch beyond-paper: bucket dispatch as MoE EP
   bench_kernels      Pallas kernel cost models
   bench_transport    alltoall vs torus2d vs torus3d flush-window backends
@@ -69,7 +74,8 @@ MODULES = [
 ]
 
 SMOKE_MODULES = ["bench_aggregation", "bench_link", "bench_kernels",
-                 "bench_transport", "bench_wire", "bench_serve"]
+                 "bench_transport", "bench_wire", "bench_serve",
+                 "bench_microcircuit"]
 
 
 def median_ms(fn, *args, iters: int = 15) -> float:

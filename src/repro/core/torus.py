@@ -99,6 +99,73 @@ class Torus:
         path = self.route(src, dst)
         return [(u, self.link_dir(u, v)) for u, v in zip(path[:-1], path[1:])]
 
+    # -- fault-aware detours ----------------------------------------------
+    def _ring_walk(self, a: int, b: int, n: int, longway: bool = False):
+        """Signed ring walk a->b: (step, dist).  ``longway`` reverses the
+        shortest direction and walks the other ``n - dist`` hops around
+        the ring (the detour around a dead link on the short arc)."""
+        fwd = (b - a) % n
+        bwd = (a - b) % n
+        step = 1 if fwd <= bwd else -1            # same tie-break as route
+        dist = min(fwd, bwd)
+        if longway and dist > 0:
+            step, dist = -step, n - dist
+        return step, dist
+
+    def axis_segment_links(self, src: int, dst: int, axis: int,
+                           longway: bool = False) -> list:
+        """The (node, direction) egress links of the ``axis`` segment of
+        the dimension-ordered route src -> dst, short arc or the long way
+        around.  Directions come from the walk's step sign (NOT from
+        coordinate deltas — on a 2-ring both neighbors are one hop away
+        in either direction, and the + and - cables are distinct).
+
+        The segment is the same whichever arcs earlier axes took: axis
+        ``a`` always starts at coords ``(d_0..d_{a-1}, s_a, .., s_2)``.
+        """
+        sc = [int(v) for v in self.coords(src)]
+        dc = [int(v) for v in self.coords(dst)]
+        dims = (self.nx, self.ny, self.nz)
+        at = list(dc[:axis]) + list(sc[axis:])    # segment start coords
+        step, dist = self._ring_walk(sc[axis], dc[axis], dims[axis], longway)
+        direction = 2 * axis + (0 if step > 0 else 1)
+        links = []
+        c = sc[axis]
+        for _ in range(dist):
+            at[axis] = c
+            links.append((int(self.node_id(*at)), direction))
+            c = (c + step) % dims[axis]
+        return links
+
+    def route_links_detour(self, src: int, dst: int,
+                           flips=(False, False, False)) -> list:
+        """Dimension-ordered route as (node, direction) links with each
+        flipped axis walking its ring the long way around; ``flips`` all
+        False reproduces :meth:`route_links` exactly."""
+        return [l for a in range(3)
+                for l in self.axis_segment_links(src, dst, a, flips[a])]
+
+    def route_links_avoiding(self, src: int, dst: int, down):
+        """Fault-aware route: per axis, detour the long way around when
+        the short arc crosses a link in ``down`` (a set of (node,
+        direction) pairs) and the long arc is clean.  Returns ``(links,
+        flips)``, or ``None`` when some axis is dead both ways — the
+        host oracle for the transport's in-scan reroute decision.
+        """
+        down = set(down)
+        flips = []
+        for a in range(3):
+            short = self.axis_segment_links(src, dst, a, longway=False)
+            if not any(l in down for l in short):
+                flips.append(False)
+                continue
+            if any(l in down
+                   for l in self.axis_segment_links(src, dst, a, True)):
+                return None
+            flips.append(True)
+        flips = tuple(flips)
+        return self.route_links_detour(src, dst, flips), flips
+
     def hops(self, src, dst) -> np.ndarray:
         """Vectorized hop count (sum of shortest ring distances per axis)."""
         sx, sy, sz = self.coords(np.asarray(src))

@@ -1,0 +1,19 @@
+"""Fabric-level fault modelling: link/node failures and reroute-around.
+
+``repro.fabric.faults`` builds static-shape, scan-compatible
+:class:`~repro.fabric.faults.FaultSchedule` objects that the torus
+transports consume through ``FabricState.link_down`` — see
+``docs/architecture.md`` (fault injection section).
+"""
+from repro.fabric.faults import (  # noqa: F401
+    FaultSchedule,
+    cable_links,
+    chaos,
+    healthy,
+    link_fault,
+    link_flap,
+    link_id,
+    mask_at,
+    n_fabric_links,
+    node_fault,
+)

@@ -1,0 +1,192 @@
+"""Fault schedules: link/node failures at flush-window granularity.
+
+The BrainScaleS commissioning line of work catalogues the hardware
+faults a multi-wafer Extoll fabric must survive — dead cables, dropped
+wafers, flapping channels.  This module is the *schedule* side of the
+fault-injection layer: a :class:`FaultSchedule` is a static-shape
+``(n_windows, K)`` boolean table over the fabric's ``K = n_shards * 2 *
+ndim`` directed egress links (node-major, directions ordered ``x+, x-,
+y+, y-, z+, z-`` — the same link ids as ``core.flow_control`` /
+``core.torus.link_loads``), so it can be closed over by a jitted
+``lax.scan`` and indexed per window with :func:`mask_at`.
+
+The *consumption* side lives in ``repro.transport.torus``: the caller
+stamps the window's mask onto the carried fabric state
+(``state._replace(link_down=mask_at(sched, w))``) before ``exchange``,
+and the transport treats dead links as zero-credit, evicts parked rows
+whose remaining route (or held arrival link) died, and walks each ring
+the long way around a dead link (``docs/architecture.md``).
+
+All constructors here are host-side numpy; a directed link dies with
+its physical cable — killing ``(u, x+)`` also kills the reverse channel
+``(v, x-)`` of the neighboring node ``v`` — because an unplugged or
+broken cable takes both directions with it (`cable_links`).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultSchedule(NamedTuple):
+    """Window-granular link-down table, ``(n_windows, K)`` bool.
+
+    Row ``w`` is the set of dead directed egress links during flush
+    window ``w``; windows beyond the table clamp to the last row (a
+    permanent fault stays dead, a healed fabric stays healed).  The
+    table is a plain array so a jitted scan can close over it and
+    ``mask_at`` stays a static-shape gather.
+    """
+
+    link_down: jax.Array
+
+    @property
+    def n_windows(self) -> int:
+        return int(self.link_down.shape[0])
+
+    @property
+    def n_links(self) -> int:
+        return int(self.link_down.shape[1])
+
+    def at(self, window) -> jax.Array:
+        return mask_at(self, window)
+
+
+def mask_at(schedule: FaultSchedule, window) -> jax.Array:
+    """(K,) bool link-down mask of ``window`` (clamped to the table)."""
+    w = jnp.clip(window, 0, schedule.link_down.shape[0] - 1)
+    return jnp.take(schedule.link_down, w, axis=0)
+
+
+# -- link-id math (host) ----------------------------------------------------
+
+def n_fabric_links(dims) -> int:
+    """K: directed egress links of a ``dims`` torus fabric."""
+    dims = tuple(int(d) for d in dims)
+    return math.prod(dims) * 2 * len(dims)
+
+
+def link_id(dims, node: int, direction: int) -> int:
+    """Directed egress link id: ``node * 2 * ndim + direction``."""
+    dims = tuple(int(d) for d in dims)
+    nl = 2 * len(dims)
+    if not 0 <= direction < nl:
+        raise ValueError(f"direction {direction} out of range for {dims}")
+    if not 0 <= node < math.prod(dims):
+        raise ValueError(f"node {node} out of range for {dims}")
+    return node * nl + direction
+
+
+def _coords(dims, node: int):
+    out = []
+    for d in dims:
+        out.append(node % d)
+        node //= d
+    return out
+
+
+def _node_id(dims, coords) -> int:
+    node, stride = 0, 1
+    for c, d in zip(coords, dims):
+        node += (c % d) * stride
+        stride *= d
+    return node
+
+
+def cable_links(dims, node: int, direction: int) -> tuple[int, int]:
+    """The two directed link ids sharing one physical cable.
+
+    ``(node, axis±)`` and the neighbor's reverse channel ``(v, axis∓)``
+    ride the same cable, so a cable fault kills both.  On a 2-ring the
+    + and - cables of a node pair are still distinct (the ring wraps),
+    which is why detours work even there.
+    """
+    dims = tuple(int(d) for d in dims)
+    axis, sign = direction // 2, direction % 2
+    c = _coords(dims, node)
+    c[axis] = (c[axis] + (1 if sign == 0 else -1)) % dims[axis]
+    v = _node_id(dims, c)
+    reverse = axis * 2 + (1 - sign)
+    return (link_id(dims, node, direction), link_id(dims, v, reverse))
+
+
+# -- constructors -----------------------------------------------------------
+
+def healthy(dims, n_windows: int) -> FaultSchedule:
+    """No faults, ever."""
+    return FaultSchedule(
+        jnp.zeros((max(int(n_windows), 1), n_fabric_links(dims)), bool))
+
+
+def _window_range(n_windows: int, start: int, stop: int | None):
+    stop = n_windows if stop is None else min(int(stop), n_windows)
+    return max(int(start), 0), stop
+
+
+def link_fault(dims, n_windows: int, node: int, direction: int, *,
+               start: int = 0, stop: int | None = None) -> FaultSchedule:
+    """One cable dead over windows ``[start, stop)`` (default: forever)."""
+    down = np.zeros((max(int(n_windows), 1), n_fabric_links(dims)), bool)
+    lo, hi = _window_range(down.shape[0], start, stop)
+    for l in cable_links(dims, node, direction):
+        down[lo:hi, l] = True
+    return FaultSchedule(jnp.asarray(down))
+
+
+def link_flap(dims, n_windows: int, node: int, direction: int, *,
+              period: int = 2, start: int = 0) -> FaultSchedule:
+    """A flapping cable: dead for ``period`` windows, alive for
+    ``period``, repeating from ``start`` — the degraded-channel failure
+    mode of the off-wafer characterization."""
+    period = max(int(period), 1)
+    down = np.zeros((max(int(n_windows), 1), n_fabric_links(dims)), bool)
+    links = cable_links(dims, node, direction)
+    for w in range(max(int(start), 0), down.shape[0]):
+        if ((w - start) // period) % 2 == 0:
+            for l in links:
+                down[w, l] = True
+    return FaultSchedule(jnp.asarray(down))
+
+
+def node_fault(dims, n_windows: int, node: int, *, start: int = 0,
+               stop: int | None = None) -> FaultSchedule:
+    """A dropped node (wafer concentrator off the fabric): every cable
+    incident to ``node`` — all its egress links AND every neighbor's
+    channel into it — dead over ``[start, stop)``."""
+    dims = tuple(int(d) for d in dims)
+    down = np.zeros((max(int(n_windows), 1), n_fabric_links(dims)), bool)
+    lo, hi = _window_range(down.shape[0], start, stop)
+    for direction in range(2 * len(dims)):
+        for l in cable_links(dims, node, direction):
+            down[lo:hi, l] = True
+    return FaultSchedule(jnp.asarray(down))
+
+
+def chaos(dims, n_windows: int, seed: int, *,
+          revive_p: float = 0.5) -> FaultSchedule:
+    """Seeded chaos: every window kills one uniformly random cable, and
+    each already-dead cable revives with probability ``revive_p`` first.
+
+    Randomness comes from the repo's single audited traffic-seeding
+    path (``repro.serve.loadgen.traffic_rng``) so chaos runs are exactly
+    reproducible from ``(dims, n_windows, seed)``.
+    """
+    from repro.serve.loadgen import traffic_rng
+    dims = tuple(int(d) for d in dims)
+    n_nodes, nl = math.prod(dims), 2 * len(dims)
+    rng = traffic_rng(seed, 0xFA)
+    down = np.zeros((max(int(n_windows), 1), n_fabric_links(dims)), bool)
+    dead: dict[tuple[int, int], None] = {}
+    for w in range(down.shape[0]):
+        dead = {cab: None for cab in dead if rng.random() >= revive_p}
+        node = int(rng.integers(0, n_nodes))
+        direction = int(rng.integers(0, nl))
+        dead[cable_links(dims, node, direction)] = None
+        for cab in dead:
+            for l in cab:
+                down[w, l] = True
+    return FaultSchedule(jnp.asarray(down))

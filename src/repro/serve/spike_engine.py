@@ -44,6 +44,7 @@ from jax import lax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.fabric import faults as fabric_faults
 from repro.serve import tenancy
 from repro.wire import codec
 from repro.wire import latency as wire_latency
@@ -117,12 +118,14 @@ class SpikeEngine:
 
     def __init__(self, mesh, axis_name: str,
                  tenants: Sequence[tenancy.TenantSpec],
-                 cfg: EngineConfig, source):
+                 cfg: EngineConfig, source,
+                 fault_schedule: fabric_faults.FaultSchedule | None = None):
         self.mesh = mesh
         self.axis_name = axis_name
         self.tenants = tuple(tenants)
         self.cfg = cfg
         self.source = source
+        self.fault_schedule = fault_schedule
         S = int(np.prod([mesh.shape[a] for a in mesh.shape]))
         T = len(self.tenants)
         if getattr(source, "n_tenants", T) != T:
@@ -150,20 +153,26 @@ class SpikeEngine:
         transport, cfg = self.transport, self.cfg
         fmt = transport.wire_fmt
         hops = transport.route_hops()                      # (n, n) const
+        sched = self.fault_schedule
         pos = jnp.arange(C)[None, None, :]
 
         def attribute(out, win_abs):
             """Receiver-side per-event latency for one window's arrivals:
             whole-window waiting from the injection meta lane (covers
             deferral, backlog dwell AND park windows) + per-row wire time
-            + queueing dwell behind parked traffic on the route."""
+            + queueing dwell behind parked traffic on the route.  Under
+            fault injection, rows are charged the links they ACTUALLY
+            traversed (detours included), not the shortest route."""
             me = lax.axis_index(ax)
             _, r_meta = codec.decode_planar(out.recv_payload)
             live = pos < out.recv_counts[..., None]        # (T, n, C)
             wait = ((win_abs - r_meta).astype(jnp.float32)
                     * jnp.float32(cfg.window_us))
+            hops_row = (hops[:, me][None, :]
+                        if out.links_used is None
+                        else out.links_used[:, :, me])     # (T, n)
             row_us = (wire_latency.hop_latency_us(
-                fmt, out.recv_counts, hops[:, me][None, :])
+                fmt, out.recv_counts, hops_row)
                 + out.queue_us[:, :, me])                  # (T, n)
             lat = wait + row_us[..., None]
             summary = jax.vmap(wire_latency.summarize_latency)(
@@ -194,6 +203,9 @@ class SpikeEngine:
                 shed = bc + fc_w - cnt
                 payload = codec.encode_planar(words,
                                               meta.astype(jnp.int32))
+                if sched is not None:
+                    state = state._replace(
+                        link_down=fabric_faults.mask_at(sched, win_abs))
                 out = transport.exchange(state, payload, cnt,
                                          axis_name=ax)
                 keep = ~out.sent_mask

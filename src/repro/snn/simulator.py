@@ -56,6 +56,7 @@ from jax.sharding import PartitionSpec as P
 from repro import transport as tp
 from repro import wire
 from repro.core import aggregator, events as ev
+from repro.fabric import faults as fabric_faults
 from repro.core.routing import RoutingTables
 from repro.snn import lif, network
 
@@ -231,9 +232,18 @@ def _apply_events(state: ShardState, words: jax.Array, counts: jax.Array,
     return state._replace(ring_exc=ring_exc, ring_inh=ring_inh), miss
 
 
-def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
+def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
+                      fault_schedule: fabric_faults.FaultSchedule | None
+                      = None):
     """Build the pipelined per-window machinery (axis_name=None -> single
     shard, no collective).
+
+    ``fault_schedule`` (torus + credits only) injects link/node failures:
+    each window's exchange runs with that window's dead-link mask stamped
+    onto the fabric state (``FabricState.link_down``), so the transport
+    reroutes around failures and the latency model charges each delivered
+    event its ACTUAL traversed links (detours included) instead of the
+    static shortest-route hop count — see ``docs/architecture.md``.
 
     Returns ``(init_pending, init_link, body, drain)``:
       init_pending()          -> empty PendingWindow carry half
@@ -263,6 +273,11 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
     can_defer = (axis_name is not None
                  and cfg.transport in ("torus2d", "torus3d")
                  and cfg.link_credits > 0)
+    if fault_schedule is not None and not can_defer:
+        raise ValueError(
+            "fault injection needs a credit-throttled torus transport "
+            "(transport='torus2d'/'torus3d' with link_credits > 0): an "
+            "uncredited fabric has no admission point to reroute at")
 
     def init_pending() -> PendingWindow:
         return PendingWindow(
@@ -292,15 +307,17 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
             full = jnp.ones((cfg.n_shards,), bool)
             return (pend.data, pend.meta, pend.counts, full,
                     tp.zero_link_stats(), lstate,
-                    jnp.zeros((cfg.n_shards,), jnp.float32))
+                    jnp.zeros((cfg.n_shards,), jnp.float32), None)
         payload = wire.encode_planar(pend.data, pend.meta)
         out = backend.exchange(lstate, payload, pend.counts,
                                axis_name=axis_name,
                                enforce_credits=enforce_credits)
         recv_events, recv_meta = wire.decode_planar(out.recv_payload)
         me = jax.lax.axis_index(axis_name)
+        links_row = (out.links_used[:, me]
+                     if out.links_used is not None else None)
         return (recv_events, recv_meta, out.recv_counts, out.sent_mask,
-                out.stats, out.state, out.queue_us[:, me])
+                out.stats, out.state, out.queue_us[:, me], links_row)
 
     def _decode(state: ShardState, recv, counts, w_exc, w_inh):
         src_shard = jnp.arange(cfg.n_shards)
@@ -309,20 +326,26 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
 
     fmt = backend.wire_fmt
 
-    def _window_latency(state: ShardState, recv_meta, counts, queue_us):
+    def _window_latency(state: ShardState, recv_meta, counts, queue_us,
+                        links_row=None):
         """Wire latency of the events just delivered: waiting since each
         event's injection step (state.t == the decoded window's end, so
         deferral, residue AND in-fabric park rounds accumulate whole
         windows) + the row's per-link switch + frame-serialization
         charges + the queueing dwell behind traffic parked along its
-        route (the congestion term; zero on an uncontended fabric)."""
+        route (the congestion term; zero on an uncontended fabric).
+
+        ``links_row`` (fault injection only) is the per-source count of
+        links each delivered row ACTUALLY traversed — detour hops are
+        charged honestly instead of assuming the shortest route."""
         me = (jax.lax.axis_index(axis_name) if axis_name is not None
               else jnp.int32(0))
         slot = jnp.arange(cfg.capacity)[None, :]
         live = slot < counts[:, None]
         wait_us = (state.t - recv_meta).astype(jnp.float32) * cfg.step_us
-        hop_us = (wire.hop_latency_us(fmt, counts, backend.route_hops()[me])
-                  + queue_us)
+        hops_row = (backend.route_hops()[me] if links_row is None
+                    else links_row)
+        hop_us = wire.hop_latency_us(fmt, counts, hops_row) + queue_us
         lat = jnp.maximum(wait_us, 0.0) + hop_us[:, None]
         return wire.summarize_latency(lat, live.astype(jnp.int32))
 
@@ -332,9 +355,15 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
         # 1. exchange + decode window k-1 (same systemtime as unpipelined:
         #    state.t here == that window's end); the route/aggregate below
         #    never reads the collective's result, so the two can overlap.
-        recv, rmeta, counts, sent_mask, lstats, lstate, qcol = _exchange(
-            pend, lstate, enforce_credits=True)
-        latency = _window_latency(state, rmeta, counts, qcol)
+        #    Under fault injection, stamp this window's dead-link mask on
+        #    the fabric state first (exchange resets it to None, so the
+        #    scan carry stays structurally stable).
+        if fault_schedule is not None:
+            lstate = lstate._replace(link_down=fabric_faults.mask_at(
+                fault_schedule, state.t // cfg.window))
+        recv, rmeta, counts, sent_mask, lstats, lstate, qcol, lrow = \
+            _exchange(pend, lstate, enforce_credits=True)
+        latency = _window_latency(state, rmeta, counts, qcol, lrow)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         # 2. simulate window k
         t0 = state.t
@@ -411,8 +440,8 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None):
                                     w_exc, w_inh)
             miss_total = miss_total + miss_f.astype(jnp.int32)
             lstate = fab.state
-        recv, _, counts, _, _, _, _ = _exchange(pend, lstate,
-                                                enforce_credits=False)
+        recv, _, counts, _, _, _, _, _ = _exchange(pend, lstate,
+                                                   enforce_credits=False)
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         return state, miss_total + miss.astype(jnp.int32)
 
@@ -433,7 +462,9 @@ class SimCarry(NamedTuple):
 
 def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
                            part: network.Partition, bg_rates: np.ndarray,
-                           bg_weight: float = 87.8):
+                           bg_weight: float = 87.8,
+                           fault_schedule: fabric_faults.FaultSchedule |
+                           None = None):
     """Segment-granular jitted simulator over a device mesh.
 
     The whole-run scan of :func:`build_sharded_sim` is a special case of
@@ -479,7 +510,7 @@ def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
     bg = jnp.asarray(np.pad(bg_rates, (0, n_tot - len(bg_rates))).reshape(S, per))
 
     init_pending, init_link, body, drain = make_pipeline_fns(
-        cfg, axis_name=axis_name)
+        cfg, axis_name=axis_name, fault_schedule=fault_schedule)
 
     def seg_fn(carry: SimCarry, dest, guid, mcast, w_e, w_i, dl, bgr,
                n_windows):
@@ -542,7 +573,9 @@ def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
 
 
 def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
-                      bg_rates: np.ndarray, bg_weight: float = 87.8):
+                      bg_rates: np.ndarray, bg_weight: float = 87.8,
+                      fault_schedule: fabric_faults.FaultSchedule |
+                      None = None):
     """Jitted multi-window simulator over a device mesh (whole-run form,
     composed from :func:`build_sharded_segments`: one segment + finish).
 
@@ -550,7 +583,7 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
     -> (state, stacked WindowStats over windows)).
     """
     seg_init, run_segment, finish = build_sharded_segments(
-        mesh, axis_name, cfg, part, bg_rates, bg_weight)
+        mesh, axis_name, cfg, part, bg_rates, bg_weight, fault_schedule)
     fresh = seg_init(0)        # pending/link halves are seed-independent
 
     def init(seed: int = 0):

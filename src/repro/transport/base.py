@@ -114,6 +114,19 @@ class FabricState(NamedTuple):
     parked_hold_shared: jax.Array  # i32, ``parked_count``-shaped: units of
                                 #   the held credit drawn from the shared
                                 #   pool (multi-tenant only; else zeros)
+    link_down: jax.Array | None = None  # (K,) bool: this WINDOW's dead
+                                #   directed links (``repro.fabric.faults``).
+                                #   Not part of the carried state proper:
+                                #   the caller stamps it right before
+                                #   ``exchange`` and the transport resets
+                                #   it to None on the state it returns, so
+                                #   a scan carry keeps a stable pytree
+                                #   structure whether or not faults are
+                                #   injected.  A dead link admits nothing
+                                #   (zero effective credit), parked rows
+                                #   blocked on/behind it are evicted back
+                                #   to re-route, and each ring phase walks
+                                #   the long way around it.
 
 
 # Carried per-link flow-control state.  ``alltoall`` uses a zero-link bank
@@ -191,6 +204,10 @@ class LinkStats(NamedTuple):
     queue_dwell_us: jax.Array    # () f32 total queueing dwell charged to
                                  #   my rows delivered this window (the
                                  #   congestion term of repro.wire.latency)
+    rerouted: jax.Array          # events of my rows delivered via a
+                                 #   fault detour this window (some ring
+                                 #   walked the long way around a dead
+                                 #   link); 0 on a healthy fabric
 
 
 def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:
@@ -199,7 +216,7 @@ def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:
     return LinkStats(z, z, z, z, z, z, z, z, z,
                      zh,
                      jnp.zeros((ndim,), jnp.int32),
-                     z, z, z, zh, jnp.zeros((), jnp.float32))
+                     z, z, z, zh, jnp.zeros((), jnp.float32), z)
 
 
 def pack_payload(payload: jax.Array, counts: jax.Array) -> jax.Array:
@@ -248,6 +265,15 @@ class TransportOut(NamedTuple):
                                #   (callers with real window timestamps —
                                #   the simulator's meta lane — use those
                                #   instead; one-shot exchanges use this)
+    links_used: jax.Array | None = None  # (n_shards, n_shards) i32 links
+                               #   of the route each row was DELIVERED
+                               #   over this window (detours included), 0
+                               #   for undelivered rows.  Only populated
+                               #   under fault injection; healthy runs
+                               #   leave it None and the latency model
+                               #   keeps charging the static route_hops()
+                               #   — so detour hops are charged honestly
+                               #   without touching the healthy hot path.
 
 
 class Transport:

@@ -94,6 +94,11 @@ class AdmissionOut(NamedTuple):
     notify: jax.Array            # (K,) i32 — entering the delay line
     queue_events: jax.Array      # i32 — parked events queued ahead on the
                                  #   row's route at window start
+    rerouted: jax.Array          # i32 — events delivered via a fault
+                                 #   detour this window (0 when healthy)
+    links_done: jax.Array        # i32 — route length (detours included)
+                                 #   of rows DELIVERED this window, 0 else
+                                 #   (the honest per-event hop charge)
 
 def default_shape(n_shards: int) -> tuple[int, int]:
     """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
@@ -245,6 +250,42 @@ class TorusTransport(base.Transport):
         self._hops_matrix = jnp.asarray(
             host.hops(ids[:, None], ids[None, :]).astype(np.int32))
 
+        # fault detours: for every subset of axes walking their ring the
+        # long way around (combo bit a set = axis a detours), the full
+        # hop-ordered link sequence, plus each axis' short/long segment
+        # link sets — what the per-window reroute decision (dirty short
+        # arc & clean long arc -> flip that axis) gathers the dead-link
+        # mask over.  A long arc is at most ``d - 1`` hops, so these
+        # tables are 2^ndim * (H_alt / H) bigger than ``_link_seq`` —
+        # still the active-route footprint, never a dense incidence
+        # tensor (n=64 in 3-D: ~1.2 MiB).
+        self.max_hops_alt = max(sum(d - 1 for d in self.dims), 1)
+        n_combo = 1 << self.ndim
+        alt = np.full((n_combo, n * n, self.max_hops_alt), -1, np.int32)
+        seg_len = max(max(d - 1 for d in self.dims), 1)
+        seg = np.full((self.ndim, 2, n * n, seg_len), -1, np.int32)
+        pad3 = (False,) * (3 - self.ndim)
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                for a in range(self.ndim):
+                    for var in (0, 1):
+                        links = host.axis_segment_links(s, d, a,
+                                                        longway=bool(var))
+                        for h, (u, dir_) in enumerate(links):
+                            seg[a, var, s * n + d, h] = u * nl + dir_
+                for combo in range(n_combo):
+                    flips = tuple(bool(combo >> a & 1)
+                                  for a in range(self.ndim)) + pad3
+                    links = host.route_links_detour(s, d, flips)
+                    for h, (u, dir_) in enumerate(links):
+                        alt[combo, s * n + d, h] = u * nl + dir_
+        self._link_seq_alt = jnp.asarray(alt)
+        self._route_len_alt = jnp.asarray(
+            (alt >= 0).sum(-1).astype(np.int32))
+        self._seg_links = jnp.asarray(seg)
+
     def route_hops(self) -> jax.Array:
         return self._hops_matrix
 
@@ -358,8 +399,10 @@ class TorusTransport(base.Transport):
             notify = notify.at[idx].add(jnp.where(trav & ~at_hold, c, 0))
             pbl = pbl.at[idx].add(jnp.where(at_hold, c, 0))
             # departing the old park spot releases its held arrival credit
+            # (hop-0 parks — fault evictions that failed to retry — hold
+            # nothing, so nothing to release)
             oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
-            rel = jnp.where(moved, c, 0)
+            rel = jnp.where(moved & (h >= 1), c, 0)
             notify = notify.at[oh].add(rel)
             pbl = pbl.at[oh].add(-rel)
             out = (complete, jnp.where(complete, 0, c),
@@ -440,12 +483,234 @@ class TorusTransport(base.Transport):
             spent=state.bank.credits - remaining,
             notify=notify,
             queue_events=queue_events,
+            rerouted=jnp.zeros((n, n), jnp.int32),
+            links_done=jnp.where(
+                fresh_complete | resumed_complete,
+                self._route_len, 0).astype(jnp.int32).reshape(n, n),
+        )
+
+    # -- fault-aware admission ---------------------------------------------
+    def _admit_global_faulted(self, state: base.FabricState,
+                              counts_all: jax.Array,
+                              link_down: jax.Array) -> AdmissionOut:
+        """The canonical two-phase replay under a per-window dead-link
+        mask.  Same deterministic structure as :meth:`_admit_global`,
+        with three fault rules layered on:
+
+        * **Reroute** — per row and axis, if the short ring arc crosses a
+          dead link and the long arc is clean, that axis walks the long
+          way around (``_link_seq_alt``); if both arcs are dead the row
+          is *unroutable* this window (deferred without blocking its
+          egress FIFO — it never reaches the link queue).  The per-axis
+          flip rule keeps the decision local to each ring phase, so the
+          rotation makes the identical choice from the same mask.
+        * **Eviction** — a parked row whose REMAINING route touches a
+          dead link, or whose held arrival link died under it, abandons
+          its progress: the held credit releases into the delay line and
+          the row retries from hop 0 on the current detour route (phase
+          A, ahead of fresh offers).  A failed retry leaves it parked at
+          hop 0 holding nothing; its custody payload stays in the fabric.
+        * **All-or-nothing detours** — a detoured row (flip combo != 0)
+          either completes or stays put: parking mid-route is only
+          meaningful against the *default* route (the mask changes every
+          window, so a detour hop index would dangle).  Rows on the
+          default route park/resume exactly as in the healthy replay.
+
+        Dead links admit nothing because every chosen route is clean by
+        construction — no spend, hold or notify ever touches one, and
+        eviction clears ``parked_by_link`` on a dying link the window it
+        dies.
+        """
+        n, K = self.n_shards, self.n_shards * self.n_links
+        H2 = self.max_hops_alt
+        flat = counts_all.reshape(-1)
+        pc0 = state.parked_count.reshape(-1)
+        ph0 = state.parked_hop.reshape(-1)
+        pa0 = state.parked_age.reshape(-1)
+        r_all = jnp.arange(n * n)
+        rows = ((r_all // n + state.bank.epoch) % n) * n + r_all % n
+        hop_idx = jnp.arange(H2)
+        down = link_down
+
+        # per-pair reroute decision from the window's mask
+        seg = self._seg_links                          # (ndim, 2, n², Hs)
+        seg_dirty = (down[jnp.maximum(seg, 0)] & (seg >= 0)).any(-1)
+        flip = seg_dirty[:, 0] & ~seg_dirty[:, 1]      # (ndim, n²)
+        routable_all = ~(seg_dirty[:, 0] & seg_dirty[:, 1]).any(0)
+        combo = jnp.sum(flip.astype(jnp.int32)
+                        * (1 << jnp.arange(self.ndim))[:, None], axis=0)
+        seq_eff_all = self._link_seq_alt[combo, r_all]  # (n², H2)
+        len_eff_all = self._route_len_alt[combo, r_all]
+        detour_all = combo != 0
+        seq0_all = jnp.pad(self._link_seq,
+                           ((0, 0), (0, H2 - self.max_hops)),
+                           constant_values=-1)
+
+        # eviction set: parked rows whose remaining default route died,
+        # whose held arrival link died, or already sitting at hop 0 from
+        # an earlier failed retry (they re-run the retry path each
+        # window until credits + a clean route let them through)
+        valid0 = seq0_all >= 0
+        rem_dirty = (valid0 & (hop_idx[None, :] >= ph0[:, None])
+                     & down[jnp.maximum(seq0_all, 0)]).any(-1)
+        held_link = jnp.take_along_axis(
+            seq0_all, jnp.maximum(ph0 - 1, 0)[:, None], axis=1)[:, 0]
+        held_dead = (ph0 >= 1) & down[jnp.maximum(held_link, 0)]
+        ev_all = (pc0 > 0) & ((ph0 == 0) | rem_dirty | held_dead)
+
+        # congestion snapshot over the routes rows will actually take
+        pbl0 = state.parked_by_link
+        seq_q = jnp.where((pc0 > 0)[:, None], seq0_all, seq_eff_all)
+        start_hop = jnp.where((pc0 > 0) & ~ev_all, ph0, 0)[:, None]
+        queue_events = jnp.sum(
+            jnp.where((seq_q >= 0) & (hop_idx[None, :] >= start_hop),
+                      pbl0[jnp.maximum(seq_q, 0)], 0),
+            axis=-1).reshape(n, n)
+
+        def resume(carry, r):
+            remaining, notify, pbl = carry
+            c, h = pc0[r], ph0[r]
+            active = c > 0
+            ev = ev_all[r]
+            # branch 1 — undisturbed resume on the default route
+            seq = seq0_all[r]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = self._route_len[r]
+            rem_at = remaining[idx]
+            short = valid & (hop_idx >= h) & (rem_at < c)
+            h_new = jnp.min(jnp.where(short, hop_idx, H2))
+            act1 = active & ~ev
+            complete1 = act1 & (h_new >= L)
+            h_stop1 = jnp.maximum(jnp.where(complete1, L, h_new), h)
+            moved1 = act1 & (h_stop1 > h)
+            trav1 = valid & (hop_idx >= h) & (hop_idx < h_stop1) & act1
+            remaining = remaining.at[idx].add(-jnp.where(trav1, c, 0))
+            at_hold1 = moved1 & ~complete1 & (hop_idx == h_stop1 - 1)
+            notify = notify.at[idx].add(jnp.where(trav1 & ~at_hold1, c, 0))
+            pbl = pbl.at[idx].add(jnp.where(at_hold1, c, 0))
+            # branch 2 — evicted retry from hop 0 on the detour route
+            seq2 = seq_eff_all[r]
+            idx2 = jnp.maximum(seq2, 0)
+            valid2 = seq2 >= 0
+            L2 = len_eff_all[r]
+            act2 = active & ev & routable_all[r]
+            short2 = valid2 & (remaining[idx2] < c)
+            h_block = jnp.min(jnp.where(short2, hop_idx, H2))
+            complete2 = act2 & (h_block >= L2)
+            park2 = (act2 & ~detour_all[r] & (h_block < L2)
+                     & (h_block >= 1))
+            h_stop2 = jnp.where(complete2, L2, jnp.where(park2, h_block, 0))
+            trav2 = valid2 & (hop_idx < h_stop2)
+            remaining = remaining.at[idx2].add(-jnp.where(trav2, c, 0))
+            at_hold2 = park2 & (hop_idx == h_stop2 - 1)
+            notify = notify.at[idx2].add(jnp.where(trav2 & ~at_hold2, c, 0))
+            pbl = pbl.at[idx2].add(jnp.where(at_hold2, c, 0))
+            # departing (or being evicted from) the old park spot
+            # releases its held arrival credit into the delay line
+            oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
+            rel = jnp.where(moved1 | (active & ev & (h >= 1)), c, 0)
+            notify = notify.at[oh].add(rel)
+            pbl = pbl.at[oh].add(-rel)
+            complete = complete1 | complete2
+            keep = active & ~complete
+            h_keep = jnp.where(ev, jnp.where(park2, h_block, 0), h_stop1)
+            out = (complete, jnp.where(complete, 0, c),
+                   jnp.where(keep, h_keep, 0),
+                   jnp.where(complete, pa0[r], 0),
+                   jnp.where(keep, pa0[r] + 1, 0),
+                   jnp.sum(trav1.astype(jnp.int32))
+                   + jnp.sum(trav2.astype(jnp.int32)),
+                   jnp.where(complete2 & detour_all[r], c, 0),
+                   jnp.where(complete1, L, 0) + jnp.where(complete2, L2, 0))
+            return (remaining, notify, pbl), out
+
+        carry = (state.bank.credits, jnp.zeros((K,), jnp.int32),
+                 state.parked_by_link)
+        carry, (res_c, pc_a, ph_a, age_res, age_a, trav_a, rer_a,
+                done_a) = lax.scan(resume, carry, rows)
+
+        def offer(carry, r):
+            remaining, notify, pbl, blocked = carry
+            c = flat[r]
+            seq = seq_eff_all[r]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = len_eff_all[r]
+            rt = routable_all[r]
+            fl = seq[0]
+            routed = (fl >= 0) & (c > 0) & rt
+            slot_busy = pc0[r] > 0
+            hol = blocked[jnp.maximum(fl, 0)]
+            rem_at = remaining[idx]
+            short = valid & (rem_at < c)
+            h_block = jnp.min(jnp.where(short, hop_idx, H2))
+            ok = routed & ~slot_busy & ~hol
+            admit_c = ok & (h_block >= L)
+            # parking mid-route only against the default route; a
+            # detoured offer is all-or-nothing
+            admit_p = (ok & ~detour_all[r] & (h_block < L)
+                       & (h_block >= 1))
+            defer = ((fl >= 0) & (c > 0)) & ~admit_c & ~admit_p
+            h_stop = jnp.where(admit_c, L, jnp.where(admit_p, h_block, 0))
+            trav = valid & (hop_idx < h_stop)
+            remaining = remaining.at[idx].add(-jnp.where(trav, c, 0))
+            at_hold = admit_p & (hop_idx == h_stop - 1)
+            notify = notify.at[idx].add(jnp.where(trav & ~at_hold, c, 0))
+            pbl = pbl.at[idx].add(jnp.where(at_hold, c, 0))
+            # an unroutable row never reaches its egress FIFO, so it
+            # cannot head-of-line-block the rows behind it
+            blocked = blocked.at[jnp.maximum(fl, 0)].set(
+                blocked[jnp.maximum(fl, 0)] | (defer & rt))
+            out = (admit_c, admit_p, jnp.where(defer, 0, -1), h_stop,
+                   jnp.sum(trav.astype(jnp.int32)),
+                   jnp.where(admit_c & detour_all[r], c, 0),
+                   jnp.where(admit_c, L, 0))
+            return (remaining, notify, pbl, blocked), out
+
+        carry = (*carry, jnp.zeros((K,), bool))
+        (remaining, notify, pbl, _), (adm_c, adm_p, stall, hp_b, trav_b,
+                                      rer_b, done_b) = lax.scan(
+            offer, carry, rows)
+
+        def unrot(x, fill, dtype):
+            return jnp.full((n * n,), fill, dtype).at[rows].set(x)
+
+        fresh_complete = unrot(adm_c, False, bool)
+        fresh_park = unrot(adm_p, False, bool)
+        resumed_complete = unrot(res_c, False, bool)
+        stall_hop = unrot(stall, -1, jnp.int32)
+        hp_fresh = unrot(hp_b, 0, jnp.int32)
+        park_count = jnp.where(fresh_park, flat, unrot(pc_a, 0, jnp.int32))
+        park_hop = jnp.where(fresh_park, hp_fresh, unrot(ph_a, 0, jnp.int32))
+        park_age = jnp.where(fresh_park, 1, unrot(age_a, 0, jnp.int32))
+        links_traversed = (unrot(trav_a, 0, jnp.int32)
+                           + unrot(trav_b, 0, jnp.int32))
+        return AdmissionOut(
+            fresh_complete=fresh_complete.reshape(n, n),
+            fresh_park=fresh_park.reshape(n, n),
+            resumed_complete=resumed_complete.reshape(n, n),
+            resume_age=unrot(age_res, 0, jnp.int32).reshape(n, n),
+            stall_hop=stall_hop.reshape(n, n),
+            park_count=park_count.reshape(n, n),
+            park_hop=park_hop.reshape(n, n),
+            park_age=park_age.reshape(n, n),
+            parked_by_link=pbl,
+            links_traversed=links_traversed.reshape(n, n),
+            spent=state.bank.credits - remaining,
+            notify=notify,
+            queue_events=queue_events,
+            rerouted=(unrot(rer_a, 0, jnp.int32)
+                      + unrot(rer_b, 0, jnp.int32)).reshape(n, n),
+            links_done=(unrot(done_a, 0, jnp.int32)
+                        + unrot(done_b, 0, jnp.int32)).reshape(n, n),
         )
 
     # -- one bidirectional ring phase --------------------------------------
     def _ring_phase(self, bundles, axis_name, my_c, n, perm_p, perm_m,
                     acc: dict, phase: int,
-                    count_cols: tuple[int, ...] = (-1,)):
+                    count_cols: tuple[int, ...] = (-1,),
+                    fault=None):
         """Rotate (n, B, W1) count-packed bundles (indexed by target ring
         coordinate) to their owners; returns them indexed by *source* ring
         coordinate.  ``acc`` accumulates LinkStats terms across phases.
@@ -456,11 +721,46 @@ class TorusTransport(base.Transport):
         count-packed sub-row per tenant, each its own frame train on the
         wire (tenants are separate logical streams), so byte/occupancy
         accounting sums over every tenant's count column.
+
+        ``fault`` is ``None`` on a healthy fabric (the unchanged fast
+        path), or ``(down_plus, down_minus)`` — per ring coordinate, is
+        that node's +/- link of this axis dead this window.  Each node
+        then flips the bundles whose short arc crosses a dead link to
+        the long way around (matching the admission replay's per-axis
+        rule — same mask, same links, same decision), both direction
+        loops extend to ``n - 1`` hops, and absorption accumulates
+        (a source delivers via + or via -, never both).  A bundle slot
+        crossing a dead link is zero by construction: any row still
+        aboard at that hop has the dead link in its arc and was either
+        flipped to the other direction or refused by admission.
         """
         coord = jnp.arange(n)
         fwd = (coord - my_c) % n
-        plus = (fwd >= 1) & (fwd <= n // 2)
-        minus = fwd > n // 2
+        short_plus = fwd <= n // 2
+        if fault is None:
+            plus = (fwd >= 1) & short_plus
+            minus = fwd > n // 2
+            hops_p, hops_m = n // 2, (n - 1) // 2
+        else:
+            down_p, down_m = fault
+            # OR of the first k links walking +/- from my coordinate
+            cum_p = jnp.cumsum(
+                down_p[(my_c + coord) % n].astype(jnp.int32))
+            cum_m = jnp.cumsum(
+                down_m[(my_c - coord) % n].astype(jnp.int32))
+
+            def arc_dirty(cum, k):
+                return (k >= 1) & (cum[jnp.maximum(k - 1, 0)] > 0)
+
+            dirty_p = arc_dirty(cum_p, fwd)
+            dirty_m = arc_dirty(cum_m, (n - fwd) % n)
+            short_dirty = jnp.where(short_plus, dirty_p, dirty_m)
+            long_dirty = jnp.where(short_plus, dirty_m, dirty_p)
+            flip = short_dirty & ~long_dirty
+            use_plus = jnp.logical_xor(short_plus, flip)
+            plus = (fwd >= 1) & use_plus
+            minus = (fwd >= 1) & ~use_plus
+            hops_p = hops_m = n - 1
         vp = jnp.where(plus[:, None, None], bundles, jnp.uint32(0))
         vm = jnp.where(minus[:, None, None], bundles, jnp.uint32(0))
         recv = jnp.zeros_like(bundles)
@@ -484,23 +784,39 @@ class TorusTransport(base.Transport):
                                                     bundle_counts(v)))
 
         for direction, v, perm, n_hops in (
-            ("+", vp, perm_p, n // 2),
-            ("-", vm, perm_m, (n - 1) // 2),
+            ("+", vp, perm_p, hops_p),
+            ("-", vm, perm_m, hops_m),
         ):
             for h in range(1, n_hops + 1):
                 acc["bytes"] += wire(v)
                 acc["owire"] += owire(v)
                 v = lax.ppermute(v, axis_name, perm)
                 src = (my_c - h) % n if direction == "+" else (my_c + h) % n
-                recv = recv.at[src].set(jnp.take(v, my_c, axis=0))
+                got = jnp.take(v, my_c, axis=0)
+                if fault is None:
+                    recv = recv.at[src].set(got)
+                else:
+                    recv = recv.at[src].add(got)
                 v = v.at[my_c].set(jnp.uint32(0))
                 acc["hops"] += 1
                 occ = live_events(v)
                 acc["in_flight"] = jnp.maximum(acc["in_flight"], occ)
                 acc["in_flight_phase"][phase] = jnp.maximum(
                     acc["in_flight_phase"][phase], occ)
-        # everything within shortest distance has been absorbed
+        # everything within shortest (or detour) distance was absorbed
         return recv
+
+    def _phase_fault(self, down, a: int, me, my_c):
+        """Slice the (K,) dead-link mask into this node's axis-``a`` ring
+        view: per ring coordinate, is that node's +/- link of the axis
+        dead.  Node at ring coordinate c is ``me + (c - my_c) * stride``
+        (only the axis-a digit of the flattened id changes)."""
+        if down is None:
+            return None
+        stride = int(np.prod(self.dims[:a], dtype=np.int64)) if a else 1
+        ring_nodes = me + (jnp.arange(self.dims[a]) - my_c) * stride
+        return (down[ring_nodes * self.n_links + 2 * a],
+                down[ring_nodes * self.n_links + 2 * a + 1])
 
     # -- phase reshapes ----------------------------------------------------
     # The (n, W1) buffer keeps a fixed layout: flattened index
@@ -535,11 +851,17 @@ class TorusTransport(base.Transport):
         counts = counts.astype(jnp.int32)
         is_local = jnp.arange(n) == me
         zero_q = jnp.zeros((n, n), jnp.float32)
+        down = state.link_down      # per-window fault mask (usually None)
 
         # 1. injection: hop-by-hop credit admission over the whole route,
         #    transit buffers drained first (compiled out when unthrottled
         #    — no all-gather, no scan, no tables)
         throttled = enforce_credits and self.link_credits > 0
+        if down is not None and not throttled:
+            raise ValueError(
+                "fault injection (FabricState.link_down) requires credit "
+                "flow control: an unthrottled fabric has no per-link "
+                "admission to refuse at a dead link (set link_credits > 0)")
         if throttled:
             if state.parked_payload.shape != payload.shape:
                 raise ValueError(
@@ -548,7 +870,9 @@ class TorusTransport(base.Transport):
                     f"init_state(payload_width=W) so parked rows keep "
                     f"custody of their wire words")
             counts_all = self._allgather_counts(counts, me, axis_name)
-            adm = self._admit_global(state, counts_all)
+            adm = (self._admit_global_faulted(state, counts_all, down)
+                   if down is not None
+                   else self._admit_global(state, counts_all))
             fresh_c = adm.fresh_complete[me]
             fresh_p = adm.fresh_park[me]
             resumed = adm.resumed_complete[me]
@@ -592,7 +916,8 @@ class TorusTransport(base.Transport):
             cnt_in = counts
             row_payload = payload
             state = state._replace(bank=fc.credit_tick(
-                state.bank, jnp.zeros_like(state.bank.credits)))
+                state.bank, jnp.zeros_like(state.bank.credits)),
+                link_down=None)
             sent_mask = sent_now = jnp.ones((n,), bool)
             queue_us = park_wait_us = zero_q
         packed = base.pack_payload(row_payload, cnt_in)
@@ -609,7 +934,9 @@ class TorusTransport(base.Transport):
             perm_p, perm_m = self._perm[a]
             recv = self._ring_phase(bundles, axis_name, my_c[a],
                                     self.dims[a], perm_p, perm_m, acc,
-                                    phase=a)
+                                    phase=a,
+                                    fault=self._phase_fault(down, a, me,
+                                                            my_c[a]))
             buf = self._from_phase(recv, a)
         recv_payload, recv_counts = base.unpack_payload(buf)
 
@@ -636,12 +963,14 @@ class TorusTransport(base.Transport):
             dwell = jnp.sum(jnp.where(
                 fresh_c | resumed, queue_us[me] + park_wait_us[me],
                 0.0)).astype(jnp.float32)
+            rerouted = jnp.sum(adm.rerouted[me]).astype(jnp.int32)
         else:
             sent = jnp.sum(cnt_in).astype(jnp.int32)
             parked = unparked = jnp.zeros((), jnp.int32)
             parked_by_hop = jnp.zeros((self.max_hops,), jnp.int32)
             owire = acc["owire"].astype(jnp.int32)
             dwell = jnp.zeros((), jnp.float32)
+            rerouted = jnp.zeros((), jnp.int32)
         stats = base.LinkStats(
             offered_events=offered,
             sent_events=sent,
@@ -660,6 +989,7 @@ class TorusTransport(base.Transport):
                 jnp.int32) if throttled else jnp.zeros((), jnp.int32),
             parked_by_hop=parked_by_hop,
             queue_dwell_us=dwell,
+            rerouted=rerouted,
         )
         return base.TransportOut(
             state=state,
@@ -671,6 +1001,7 @@ class TorusTransport(base.Transport):
             queue_us=queue_us,
             unparked_now=jnp.where(resumed, pc0_me, 0),
             park_wait_us=park_wait_us,
+            links_used=adm.links_done if down is not None else None,
         )
 
     # -- end-of-run fabric walk --------------------------------------------
@@ -838,6 +1169,8 @@ class TenantAdmissionOut(NamedTuple):
     spent: jax.Array             # ((T+1)*K,)
     notify: jax.Array            # ((T+1)*K,)
     queue_events: jax.Array      # (T, n, n) parked events queued ahead
+    rerouted: jax.Array          # (T, n, n) events delivered via detour
+    links_done: jax.Array        # (T, n, n) delivered-route link counts
 
 
 class TenantTorusTransport(TorusTransport):
@@ -1015,10 +1348,12 @@ class TenantTorusTransport(TorusTransport):
             pbl = pbl.at[T * K + idx].add(jnp.where(at_hold, take_s, 0))
             hs_new = jnp.sum(jnp.where(at_hold, take_s, 0))
             # departing the old park spot releases its held arrival
-            # credit back to the slots that funded it
+            # credit back to the slots that funded it (hop-0 parks from
+            # fault evictions hold nothing)
             oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
-            rel_s = jnp.where(moved, hs, 0)
-            rel_r = jnp.where(moved, c, 0) - rel_s
+            held = moved & (h >= 1)
+            rel_s = jnp.where(held, hs, 0)
+            rel_r = jnp.where(held, c, 0) - rel_s
             notify = notify.at[t * K + oh].add(rel_r)
             notify = notify.at[T * K + oh].add(rel_s)
             pbl = pbl.at[t * K + oh].add(-rel_r)
@@ -1110,6 +1445,249 @@ class TenantTorusTransport(TorusTransport):
             spent=state.bank.credits - remaining,
             notify=notify,
             queue_events=queue_events,
+            rerouted=jnp.zeros(shape3, jnp.int32),
+            links_done=jnp.where(
+                fresh_complete.reshape(shape3)
+                | unrot(res_c, False, bool).reshape(shape3),
+                self._route_len.reshape(n, n)[None], 0).astype(jnp.int32),
+        )
+
+    def _admit_tenants_faulted(self, state: base.FabricState,
+                               counts_all: jax.Array,
+                               link_down: jax.Array) -> TenantAdmissionOut:
+        """Tenant-axis admission under a dead-link mask: the fault rules
+        of :meth:`_admit_global_faulted` (per-axis reroute, eviction back
+        to hop 0, all-or-nothing detours) with the reserved-first
+        spending and split-exact hold refunds of :meth:`_admit_tenants`.
+        """
+        n, T = self.n_shards, self.n_tenants
+        K = n * self.n_links
+        H2 = self.max_hops_alt
+        flat = counts_all.reshape(-1)
+        pc0 = state.parked_count.reshape(-1)
+        ph0 = state.parked_hop.reshape(-1)
+        pa0 = state.parked_age.reshape(-1)
+        hs0 = state.parked_hold_shared.reshape(-1)
+        r_all = jnp.arange(T * n * n)
+        comb = (r_all // n + state.bank.epoch) % (T * n)
+        rows = comb * n + r_all % n
+        hop_idx = jnp.arange(H2)
+        down = link_down
+        pair_of = r_all % (n * n)
+
+        # per-PAIR reroute decision (shared by every tenant: the mask is
+        # physical, not per slot)
+        seg = self._seg_links
+        seg_dirty = (down[jnp.maximum(seg, 0)] & (seg >= 0)).any(-1)
+        flip = seg_dirty[:, 0] & ~seg_dirty[:, 1]
+        routable_pair = ~(seg_dirty[:, 0] & seg_dirty[:, 1]).any(0)
+        combo = jnp.sum(flip.astype(jnp.int32)
+                        * (1 << jnp.arange(self.ndim))[:, None], axis=0)
+        pair_idx = jnp.arange(n * n)
+        seq_eff_pair = self._link_seq_alt[combo, pair_idx]   # (n², H2)
+        len_eff_pair = self._route_len_alt[combo, pair_idx]
+        detour_pair = combo != 0
+        seq0_pair = jnp.pad(self._link_seq,
+                            ((0, 0), (0, H2 - self.max_hops)),
+                            constant_values=-1)
+
+        # eviction set over the (T, n, n) row tables
+        seq0_rows = seq0_pair[pair_of]                       # (Tn², H2)
+        rem_dirty = ((seq0_rows >= 0)
+                     & (hop_idx[None, :] >= ph0[:, None])
+                     & down[jnp.maximum(seq0_rows, 0)]).any(-1)
+        held_link = jnp.take_along_axis(
+            seq0_rows, jnp.maximum(ph0 - 1, 0)[:, None], axis=1)[:, 0]
+        held_dead = (ph0 >= 1) & down[jnp.maximum(held_link, 0)]
+        ev_all = (pc0 > 0) & ((ph0 == 0) | rem_dirty | held_dead)
+
+        # congestion snapshot over PHYSICAL links on the actual routes
+        pbl_phys = state.parked_by_link.reshape(T + 1, K).sum(0)
+        seq_q = jnp.where((pc0 > 0)[:, None], seq0_rows,
+                          seq_eff_pair[pair_of])
+        start_hop = jnp.where((pc0 > 0) & ~ev_all, ph0, 0)[:, None]
+        queue_events = jnp.sum(
+            jnp.where((seq_q >= 0) & (hop_idx[None, :] >= start_hop),
+                      pbl_phys[jnp.maximum(seq_q, 0)], 0),
+            axis=-1).reshape(T, n, n)
+
+        def split_spend(remaining, t, idx, trav, c):
+            slot_r = t * K + idx
+            slot_s = T * K + idx
+            take_r = jnp.where(trav, jnp.minimum(c, remaining[slot_r]), 0)
+            take_s = jnp.where(trav, c - take_r, 0)
+            remaining = remaining.at[slot_r].add(-take_r)
+            remaining = remaining.at[slot_s].add(-take_s)
+            return remaining, take_r, take_s
+
+        def resume(carry, r):
+            remaining, notify, pbl = carry
+            t = r // (n * n)
+            pair = r % (n * n)
+            c, h, hs = pc0[r], ph0[r], hs0[r]
+            active = c > 0
+            ev = ev_all[r]
+            # branch 1 — undisturbed resume on the default route
+            seq = seq0_pair[pair]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = self._route_len[pair]
+            avail = remaining[t * K + idx] + remaining[T * K + idx]
+            short = valid & (hop_idx >= h) & (avail < c)
+            h_new = jnp.min(jnp.where(short, hop_idx, H2))
+            act1 = active & ~ev
+            complete1 = act1 & (h_new >= L)
+            h_stop1 = jnp.maximum(jnp.where(complete1, L, h_new), h)
+            moved1 = act1 & (h_stop1 > h)
+            trav1 = valid & (hop_idx >= h) & (hop_idx < h_stop1) & act1
+            remaining, take_r1, take_s1 = split_spend(remaining, t, idx,
+                                                      trav1, c)
+            at_hold1 = moved1 & ~complete1 & (hop_idx == h_stop1 - 1)
+            notify = notify.at[t * K + idx].add(
+                jnp.where(at_hold1, 0, take_r1))
+            notify = notify.at[T * K + idx].add(
+                jnp.where(at_hold1, 0, take_s1))
+            pbl = pbl.at[t * K + idx].add(jnp.where(at_hold1, take_r1, 0))
+            pbl = pbl.at[T * K + idx].add(jnp.where(at_hold1, take_s1, 0))
+            hs_new1 = jnp.sum(jnp.where(at_hold1, take_s1, 0))
+            # branch 2 — evicted retry from hop 0 on the detour route
+            seq2 = seq_eff_pair[pair]
+            idx2 = jnp.maximum(seq2, 0)
+            valid2 = seq2 >= 0
+            L2 = len_eff_pair[pair]
+            act2 = active & ev & routable_pair[pair]
+            avail2 = remaining[t * K + idx2] + remaining[T * K + idx2]
+            short2 = valid2 & (avail2 < c)
+            h_block = jnp.min(jnp.where(short2, hop_idx, H2))
+            complete2 = act2 & (h_block >= L2)
+            park2 = (act2 & ~detour_pair[pair] & (h_block < L2)
+                     & (h_block >= 1))
+            h_stop2 = jnp.where(complete2, L2,
+                                jnp.where(park2, h_block, 0))
+            trav2 = valid2 & (hop_idx < h_stop2)
+            remaining, take_r2, take_s2 = split_spend(remaining, t, idx2,
+                                                      trav2, c)
+            at_hold2 = park2 & (hop_idx == h_stop2 - 1)
+            notify = notify.at[t * K + idx2].add(
+                jnp.where(at_hold2, 0, take_r2))
+            notify = notify.at[T * K + idx2].add(
+                jnp.where(at_hold2, 0, take_s2))
+            pbl = pbl.at[t * K + idx2].add(jnp.where(at_hold2, take_r2, 0))
+            pbl = pbl.at[T * K + idx2].add(jnp.where(at_hold2, take_s2, 0))
+            hs_new2 = jnp.sum(jnp.where(at_hold2, take_s2, 0))
+            # release the old hold: on normal advance OR on eviction
+            oh = jnp.maximum(seq[jnp.maximum(h - 1, 0)], 0)
+            release = moved1 | (active & ev & (h >= 1))
+            rel_s = jnp.where(release, hs, 0)
+            rel_r = jnp.where(release, c, 0) - rel_s
+            notify = notify.at[t * K + oh].add(rel_r)
+            notify = notify.at[T * K + oh].add(rel_s)
+            pbl = pbl.at[t * K + oh].add(-rel_r)
+            pbl = pbl.at[T * K + oh].add(-rel_s)
+            complete = complete1 | complete2
+            keep = active & ~complete
+            h_keep = jnp.where(ev, jnp.where(park2, h_block, 0), h_stop1)
+            hs_keep = jnp.where(
+                ev, jnp.where(park2, hs_new2, 0),
+                jnp.where(moved1, hs_new1, hs))
+            out = (complete, jnp.where(complete, 0, c),
+                   jnp.where(keep, h_keep, 0),
+                   jnp.where(complete, pa0[r], 0),
+                   jnp.where(keep, pa0[r] + 1, 0),
+                   jnp.sum(trav1.astype(jnp.int32))
+                   + jnp.sum(trav2.astype(jnp.int32)),
+                   jnp.where(keep, hs_keep, 0),
+                   jnp.where(complete2 & detour_pair[pair], c, 0),
+                   jnp.where(complete1, L, 0) + jnp.where(complete2, L2, 0))
+            return (remaining, notify, pbl), out
+
+        S = (T + 1) * K
+        carry = (state.bank.credits, jnp.zeros((S,), jnp.int32),
+                 state.parked_by_link)
+        carry, (res_c, pc_a, ph_a, age_res, age_a, trav_a, hs_a, rer_a,
+                done_a) = lax.scan(resume, carry, rows)
+
+        def offer(carry, r):
+            remaining, notify, pbl, blocked = carry
+            t = r // (n * n)
+            pair = r % (n * n)
+            c = flat[r]
+            seq = seq_eff_pair[pair]
+            idx = jnp.maximum(seq, 0)
+            valid = seq >= 0
+            L = len_eff_pair[pair]
+            rt = routable_pair[pair]
+            fl = seq[0]
+            routed = (fl >= 0) & (c > 0) & rt
+            slot_busy = pc0[r] > 0
+            bl_idx = t * K + jnp.maximum(fl, 0)
+            hol = blocked[bl_idx]
+            avail = remaining[t * K + idx] + remaining[T * K + idx]
+            short = valid & (avail < c)
+            h_block = jnp.min(jnp.where(short, hop_idx, H2))
+            ok = routed & ~slot_busy & ~hol
+            admit_c = ok & (h_block >= L)
+            admit_p = (ok & ~detour_pair[pair] & (h_block < L)
+                       & (h_block >= 1))
+            defer = ((fl >= 0) & (c > 0)) & ~admit_c & ~admit_p
+            h_stop = jnp.where(admit_c, L, jnp.where(admit_p, h_block, 0))
+            trav = valid & (hop_idx < h_stop)
+            remaining, take_r, take_s = split_spend(remaining, t, idx,
+                                                    trav, c)
+            at_hold = admit_p & (hop_idx == h_stop - 1)
+            notify = notify.at[t * K + idx].add(
+                jnp.where(at_hold, 0, take_r))
+            notify = notify.at[T * K + idx].add(
+                jnp.where(at_hold, 0, take_s))
+            pbl = pbl.at[t * K + idx].add(jnp.where(at_hold, take_r, 0))
+            pbl = pbl.at[T * K + idx].add(jnp.where(at_hold, take_s, 0))
+            # unroutable rows never reach the egress FIFO: no HOL block
+            blocked = blocked.at[bl_idx].set(hol | (defer & rt))
+            out = (admit_c, admit_p, jnp.where(defer, 0, -1), h_stop,
+                   jnp.sum(trav.astype(jnp.int32)),
+                   jnp.sum(jnp.where(at_hold, take_s, 0)),
+                   jnp.where(admit_c & detour_pair[pair], c, 0),
+                   jnp.where(admit_c, L, 0))
+            return (remaining, notify, pbl, blocked), out
+
+        carry = (*carry, jnp.zeros((T * K,), bool))
+        (remaining, notify, pbl, _), \
+            (adm_c, adm_p, stall, hp_b, trav_b, hs_b, rer_b,
+             done_b) = lax.scan(offer, carry, rows)
+
+        def unrot(x, fill, dtype):
+            return jnp.full((T * n * n,), fill, dtype).at[rows].set(x)
+
+        fresh_complete = unrot(adm_c, False, bool)
+        fresh_park = unrot(adm_p, False, bool)
+        park_count = jnp.where(fresh_park, flat, unrot(pc_a, 0, jnp.int32))
+        park_hop = jnp.where(fresh_park, unrot(hp_b, 0, jnp.int32),
+                             unrot(ph_a, 0, jnp.int32))
+        park_age = jnp.where(fresh_park, 1, unrot(age_a, 0, jnp.int32))
+        hold_shared = jnp.where(fresh_park, unrot(hs_b, 0, jnp.int32),
+                                unrot(hs_a, 0, jnp.int32))
+        links_traversed = (unrot(trav_a, 0, jnp.int32)
+                           + unrot(trav_b, 0, jnp.int32))
+        shape3 = (T, n, n)
+        return TenantAdmissionOut(
+            fresh_complete=fresh_complete.reshape(shape3),
+            fresh_park=fresh_park.reshape(shape3),
+            resumed_complete=unrot(res_c, False, bool).reshape(shape3),
+            resume_age=unrot(age_res, 0, jnp.int32).reshape(shape3),
+            stall_hop=unrot(stall, -1, jnp.int32).reshape(shape3),
+            park_count=park_count.reshape(shape3),
+            park_hop=park_hop.reshape(shape3),
+            park_age=park_age.reshape(shape3),
+            hold_shared=hold_shared.reshape(shape3),
+            parked_by_link=pbl,
+            links_traversed=links_traversed.reshape(shape3),
+            spent=state.bank.credits - remaining,
+            notify=notify,
+            queue_events=queue_events,
+            rerouted=(unrot(rer_a, 0, jnp.int32)
+                      + unrot(rer_b, 0, jnp.int32)).reshape(shape3),
+            links_done=(unrot(done_a, 0, jnp.int32)
+                        + unrot(done_b, 0, jnp.int32)).reshape(shape3),
         )
 
     # -- tenant bundle packing ---------------------------------------------
@@ -1132,7 +1710,7 @@ class TenantTorusTransport(TorusTransport):
         return tuple(t * (width + 1) + width for t in range(self.n_tenants))
 
     def _ship_rotation(self, packed_bundles: jax.Array, me, axis_name: str,
-                       acc: dict, count_cols: tuple[int, ...]):
+                       acc: dict, count_cols: tuple[int, ...], down=None):
         my_c = self._coords_of(me)
         buf = packed_bundles
         for a in range(self.ndim):
@@ -1140,7 +1718,9 @@ class TenantTorusTransport(TorusTransport):
             perm_p, perm_m = self._perm[a]
             recv = self._ring_phase(bundles, axis_name, my_c[a],
                                     self.dims[a], perm_p, perm_m, acc,
-                                    phase=a, count_cols=count_cols)
+                                    phase=a, count_cols=count_cols,
+                                    fault=self._phase_fault(down, a, me,
+                                                            my_c[a]))
             buf = self._from_phase(recv, a)
         return self._unpack_tenants(buf)
 
@@ -1183,6 +1763,11 @@ class TenantTorusTransport(TorusTransport):
                 f"counts (T, n); got {payload.shape} / {counts.shape}")
         is_local = (jnp.arange(n) == me)[None, :]
         zero_q = jnp.zeros((T, n, n), jnp.float32)
+        down = state.link_down
+        if down is not None and not enforce_credits:
+            raise ValueError("fault injection (FabricState.link_down) "
+                             "requires credit flow control; "
+                             "enforce_credits=False cannot reroute")
 
         if enforce_credits:
             if state.parked_payload.shape != payload.shape:
@@ -1192,7 +1777,9 @@ class TenantTorusTransport(TorusTransport):
                     f"{payload.shape}: initialize with "
                     f"init_state(payload_width=W)")
             counts_all = self._allgather_counts_mt(counts, me, axis_name)
-            adm = self._admit_tenants(state, counts_all)
+            adm = (self._admit_tenants_faulted(state, counts_all, down)
+                   if down is not None
+                   else self._admit_tenants(state, counts_all))
             fresh_c = adm.fresh_complete[:, me]          # (T, n)
             fresh_p = adm.fresh_park[:, me]
             resumed = adm.resumed_complete[:, me]
@@ -1227,8 +1814,10 @@ class TenantTorusTransport(TorusTransport):
             stall_hop = jnp.full((T, n), -1, jnp.int32)
             cnt_in = counts
             row_payload = payload
-            state = state._replace(bank=fc.credit_tick(
-                state.bank, jnp.zeros_like(state.bank.credits)))
+            state = state._replace(
+                bank=fc.credit_tick(state.bank,
+                                    jnp.zeros_like(state.bank.credits)),
+                link_down=None)
             sent_mask = sent_now = jnp.ones((T, n), bool)
             queue_us = park_wait_us = zero_q
 
@@ -1236,7 +1825,7 @@ class TenantTorusTransport(TorusTransport):
         w = payload.shape[-1]
         recv_payload, recv_counts = self._ship_rotation(
             self._pack_tenants(row_payload, cnt_in), me, axis_name, acc,
-            self._tenant_count_cols(w))
+            self._tenant_count_cols(w), down=down)
 
         stalled_by_hop = self._by_hop(
             stall_hop, jnp.where(stall_hop >= 0, counts, 0))
@@ -1256,6 +1845,8 @@ class TenantTorusTransport(TorusTransport):
                 queue_us[:, me] + park_wait_us[:, me], 0.0),
                 axis=-1).astype(jnp.float32)
             in_fabric = jnp.sum(pk_cnt, axis=-1).astype(jnp.int32)
+            rerouted = jnp.sum(adm.rerouted[:, me], axis=-1).astype(
+                jnp.int32)
         else:
             sent = jnp.sum(cnt_in, axis=-1)
             parked = unparked = jnp.zeros((T,), jnp.int32)
@@ -1266,6 +1857,7 @@ class TenantTorusTransport(TorusTransport):
             in_fabric = (jnp.sum(state.parked_count[:, me], axis=-1)
                          .astype(jnp.int32) if state.parked_count.size
                          else jnp.zeros((T,), jnp.int32))
+            rerouted = jnp.zeros((T,), jnp.int32)
         hops_f, bytes_f, inflight_f, inflight_ph = self._fabric_level(acc)
         stats = base.LinkStats(
             offered_events=offered.astype(jnp.int32),
@@ -1284,6 +1876,7 @@ class TenantTorusTransport(TorusTransport):
             in_fabric_events=in_fabric,
             parked_by_hop=parked_by_hop,
             queue_dwell_us=dwell,
+            rerouted=rerouted,
         )
         return base.TransportOut(
             state=state,
@@ -1295,6 +1888,7 @@ class TenantTorusTransport(TorusTransport):
             queue_us=queue_us,
             unparked_now=jnp.where(resumed, pc0_me, 0),
             park_wait_us=park_wait_us,
+            links_used=adm.links_done if down is not None else None,
         )
 
     # -- end-of-run fabric walk --------------------------------------------
@@ -1351,6 +1945,7 @@ class TenantTorusTransport(TorusTransport):
             in_fabric_events=z,
             parked_by_hop=jnp.zeros((T, H), jnp.int32),
             queue_dwell_us=jnp.zeros((T,), jnp.float32),
+            rerouted=z,
         )
         return base.TransportOut(
             state=new_state,

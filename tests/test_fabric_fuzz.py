@@ -38,6 +38,19 @@ per-(tenant, window) conservation, partitioned credit-slot invariance
 (reserved slices + shared pool), cross-shard replication and clean
 drain; and the serving engine's QoS isolation claim is pinned end to
 end (quiet tenant's p99 contended vs solo on identical traffic).
+
+**Chaos mode** (``repro.fabric.faults``): the same invariant set
+with a seeded ``chaos`` schedule killing one random physical cable
+EVERY window (each dead cable revives next window with p=0.5).  Two
+invariants are *adapted* for fault mode — hop-0 parks become legal (an
+evicted row whose detour retry also stalls re-parks at its source
+holding nothing) and deferral gains the unroutable case (both ring
+arcs dirty) — and two are *added*: dead links are frozen (nothing
+parked on a dead link after the window it dies) and parked holds
+balance exactly (``parked_by_link.sum() == parked_count[hop >= 1]``).
+Credit conservation, custody bit-exactness and the clean drain are
+unchanged: a fault may delay or detour an event, never corrupt or
+leak it.
 """
 import os
 
@@ -203,6 +216,164 @@ assert cases >= 200
 print("FABRIC_FUZZ_OK")
 """, timeout=1200)
     assert "FABRIC_FUZZ_OK" in out
+
+
+def test_fabric_chaos_fuzz():
+    """Chaos mode: a pinned-seed ``chaos`` schedule kills one random
+    cable every window (revive p=0.5) while the transport-level
+    invariant fuzz runs.  Conservation, credit-unit invariance, payload
+    custody and the clean end-of-run drain must all survive; dead links
+    must be frozen (``parked_by_link[dead] == 0`` once the mask lands);
+    and at least some traffic must actually detour (``rerouted > 0``
+    across the sweep)."""
+    out = run_md(r"""
+import functools
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro import transport
+from repro.fabric import chaos, mask_at
+from repro.serve.loadgen import traffic_rng, draw_counts, draw_payload
+
+D, W, WINDOWS = 8, 6, 6
+SEEDS = 5
+mesh = jax.make_mesh((D,), ("wafer",))
+spec = P("wafer")
+
+def make_fns(t):
+    def body(lstate, p, c):
+        lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+        out = t.exchange(lstate, p[0], c[0], axis_name="wafer",
+                         enforce_credits=True)
+        return jax.tree_util.tree_map(
+            lambda x: x[None],
+            (out.state, out.recv_payload, out.recv_counts, out.sent_mask,
+             out.sent_now, out.stats))
+    def dbody(lstate):
+        lstate = jax.tree_util.tree_map(lambda x: x[0], lstate)
+        out = t.drain_fabric(lstate, axis_name="wafer")
+        return jax.tree_util.tree_map(
+            lambda x: x[None],
+            (out.state, out.recv_payload, out.recv_counts, out.stats))
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec, spec, spec),
+                           out_specs=spec, check_rep=False))
+    walk = jax.jit(shard_map(dbody, mesh=mesh, in_specs=(spec,),
+                             out_specs=spec, check_rep=False))
+    return fn, walk
+
+def chaos_case(fns, t, dims, seed):
+    fn, fn_walk = fns
+    rng = traffic_rng(seed)
+    masks = np.asarray(chaos(dims, WINDOWS, seed).link_down)
+    assert masks.any(), "chaos schedule killed nothing"
+    st0 = t.init_state(W)
+    tot0 = (np.asarray(st0.bank.credits)
+            + np.asarray(st0.bank.pending).sum(-1)
+            + np.asarray(st0.parked_by_link))
+    lstate = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (D,) + x.shape), st0)
+    ledger = {}
+    pc_prev = np.zeros((D, D), np.int64)
+    rer = 0
+    for win in range(WINDOWS):
+        counts = jnp.asarray(draw_counts(rng, (D, D), 31))
+        payload = jnp.asarray(draw_payload(rng, (D, D, W)).astype(np.uint32))
+        # stamp this window's fault mask; exchange resets it to None
+        down = jnp.broadcast_to(jnp.asarray(masks[win]),
+                                (D,) + masks[win].shape)
+        lstate = lstate._replace(link_down=down)
+        lstate, rp, rcnt, mask, snow, st = fn(lstate, payload, counts)
+        off = np.asarray(st.offered_events)
+        sent = np.asarray(st.sent_events)
+        defr = np.asarray(st.deferred_events)
+        park = np.asarray(st.parked_events)
+        unpark = np.asarray(st.unparked_events)
+        infab = np.asarray(st.in_fabric_events)
+        rer += int(np.asarray(st.rerouted).sum())
+        cm, pm = np.asarray(counts), np.asarray(payload)
+        # conservation with parked — identical to the healthy fuzz
+        assert (off == sent + defr + park).all()
+        assert sent.sum() + unpark.sum() == np.asarray(
+            st.delivered_events).sum() == np.asarray(rcnt).sum()
+        # deferral attribution stays hop-0 only (unroutable rows defer at
+        # the source, they never HOL-block); parked rows MAY now sit at
+        # hop 0 — an evicted row whose detour retry stalled holds nothing
+        sbh = np.asarray(st.stalled_by_hop)
+        pbh = np.asarray(st.parked_by_hop)
+        assert (sbh.sum(-1) == defr).all() and sbh[:, 1:].sum() == 0
+        assert (pbh.sum(-1) == infab).all()
+        held = np.where(np.asarray(mask), 0, cm).sum(1)
+        assert (held == defr).all()
+        # credit-unit invariance + replication, unchanged under faults
+        cr = np.asarray(lstate.bank.credits)
+        pend = np.asarray(lstate.bank.pending)
+        pbl = np.asarray(lstate.parked_by_link)
+        pc = np.asarray(lstate.parked_count)
+        ph = np.asarray(lstate.parked_hop)
+        assert (cr >= 0).all() and (pbl >= 0).all() and (pc >= 0).all()
+        assert (cr == cr[0]).all() and (pend == pend[0]).all()
+        assert (pc == pc[0]).all() and (pbl == pbl[0]).all()
+        assert (cr[0] + pend[0].sum(-1) + pbl[0] == tot0).all()
+        # dead links are frozen: any row parked on a link the mask just
+        # killed was evicted this window, and no chosen route (default or
+        # detour) may traverse a dead link
+        assert (pbl[0][masks[win]] == 0).all(), win
+        # parked holds balance exactly: each transit-parked row (hop >= 1)
+        # holds its count on one arrival link, hop-0 parks hold nothing
+        assert pbl[0].sum() == pc[0][ph[0] >= 1].sum()
+        # occupancy balance: parked in, unparked out
+        assert (pc[0].sum(1) == pc_prev.sum(1) + park - unpark).all()
+        # payload custody stays bit-exact through eviction + re-park
+        fresh_park = (pc[0] > 0) & (pc_prev == 0)
+        resumed = (pc_prev > 0) & (pc[0] == 0)
+        rp = np.asarray(rp)
+        snow = np.asarray(snow)
+        for s in range(D):
+            for d in range(D):
+                if fresh_park[s, d]:
+                    ledger[(s, d)] = pm[s, d].copy()
+                if resumed[s, d]:
+                    exp = ledger.pop((s, d))
+                    assert (rp[d, s] == exp).all(), (s, d, win)
+                elif snow[s, d] and s != d and cm[s, d] > 0:
+                    assert (rp[d, s] == pm[s, d]).all(), (s, d, win)
+        pc_prev = pc[0].astype(np.int64)
+    # the fabric walk ignores faults (a drained fabric is an operator
+    # action): custody drains bit-exact, tables empty, credits conserve
+    lstate, rp, rcnt, st = fn_walk(lstate)
+    rp = np.asarray(rp)
+    for (s, d), exp in sorted(ledger.items()):
+        assert (rp[d, s] == exp).all(), ("drain", s, d)
+    assert np.asarray(rcnt).sum() == pc_prev.sum()
+    assert (np.asarray(lstate.parked_count) == 0).all()
+    assert (np.asarray(lstate.parked_by_link) == 0).all()
+    cr = np.asarray(lstate.bank.credits)
+    pend = np.asarray(lstate.bank.pending)
+    assert (cr[0] + pend[0].sum(-1) == tot0).all()
+    return rer
+
+cases, rerouted = 0, 0
+for name, dims, opts in [("torus2d", (2, 4), dict(nx=2, ny=4)),
+                         ("torus3d", (2, 2, 2),
+                          dict(nx=2, ny=2, nz=2))]:
+    for credits in (48, 96):
+        t = transport.create(name, n_shards=D, link_credits=credits,
+                             notify_latency=2, **opts)
+        fns = make_fns(t)
+        for seed in range(SEEDS):
+            try:
+                rerouted += chaos_case(fns, t, dims, seed)
+            except Exception:
+                print(f"[chaos] FAILED {name} credits={credits} "
+                      f"seed={seed}")
+                raise
+            cases += 1
+print(f"CHAOS_CASES={cases} rerouted={rerouted}")
+assert cases >= 20
+assert rerouted > 0, "chaos sweep never detoured a single event"
+print("FABRIC_CHAOS_OK")
+""", timeout=1200)
+    assert "FABRIC_CHAOS_OK" in out
 
 
 def test_fabric_fuzz_simulator_latency_invariants():

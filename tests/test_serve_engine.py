@@ -128,6 +128,55 @@ def test_ledger_conservation_violation_raises():
     led.check_conservation()
 
 
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_engine_link_death_mid_segment_conserves():
+    """A cable dies mid-run (window 6 of a 4-segment serve) on the full
+    8-shard 2x2x2 torus: the engine's per-tenant ledger must still
+    balance exactly (``injected == delivered + shed``) — a fabric fault
+    may delay or detour a tenant's events, it must never lose or
+    double-count them.  Needs 8 devices, so the engine runs in a
+    subprocess; the pytest ``timeout`` is the outer belt against a
+    stalled device thread, ``run_md``'s subprocess timeout the inner."""
+    from md_helper import run_md
+    out = run_md(r"""
+import numpy as np
+import jax
+from jax.sharding import Mesh
+
+from repro.fabric import link_fault
+from repro.serve.loadgen import PoissonLoadGen, TenantProfile
+from repro.serve.spike_engine import EngineConfig, SpikeEngine
+from repro.serve.tenancy import TenantSpec
+
+n = 8
+mesh = Mesh(np.array(jax.devices()[:n]), ("w",))
+tenants = [TenantSpec("a", reserve=12, rate_epw=40.0),
+           TenantSpec("b", reserve=10, rate_epw=20.0)]
+cfg = EngineConfig(capacity=16, link_credits=32, notify_latency=2,
+                   window_us=100.0, seg_windows=4, nx=2, ny=2, nz=2)
+src = PoissonLoadGen(0, [TenantProfile("a", 40.0),
+                         TenantProfile("b", 20.0)], n, cfg.capacity)
+# the cable dies at absolute window 6 — mid-segment 2 of 4 — and stays dead
+sched = link_fault((2, 2, 2), 64, 0, 0, start=6)
+eng = SpikeEngine(mesh, "w", tenants, cfg, src,
+                  fault_schedule=sched)
+rep = eng.run(4)
+assert rep.conservation_checked
+assert np.all(rep.injected == rep.delivered + rep.shed), (
+    rep.injected, rep.delivered, rep.shed)
+assert rep.delivered.sum() > 0
+assert rep.windows == 4 * 4
+# both tenants kept receiving after the fault landed
+for t, dig in enumerate(rep.tenants):
+    assert dig.hist.sum() == rep.delivered[t]
+print("injected=%s delivered=%s shed=%s" %
+      (rep.injected.tolist(), rep.delivered.tolist(), rep.shed.tolist()))
+print("ENGINE_FAULT_OK")
+""", timeout=840)
+    assert "ENGINE_FAULT_OK" in out
+
+
 def test_loadgen_substreams_independent_of_cotenants():
     # tenant 0's window-k draw must not depend on other tenants' profiles
     a = PoissonLoadGen(5, [TenantProfile("q", 20.0),
