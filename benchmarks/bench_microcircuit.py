@@ -53,6 +53,7 @@ matrix = [
     ("node_down", node_fault(dims, n_win, 3, start=2)),
 ]
 bio_s = n_win * cfg.window * cfg.params.dt * 1e-3     # dt is ms
+trace_dir = params.get("trace_dir")
 rows = []
 for name, sched in matrix:
     init, run = sim.build_sharded_sim(mesh, "wafer", cfg, part,
@@ -88,6 +89,31 @@ for name, sched in matrix:
         "deadline_miss": int(s.deadline_miss.sum()),
         "latency_p99_us": round(float(s.latency.p99_us.max()), 3),
     })
+    if trace_dir:
+        # untimed flight-recorder pass: same config + fault schedule with
+        # the telemetry ring in the carry, decoded into an observability
+        # run directory (render: python -m repro.obs.report <dir>)
+        from repro import obs
+        from repro.fabric import faults as fabric_faults
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import report as obs_report
+        init_r, run_r = sim.build_sharded_sim(
+            mesh, "wafer", cfg, part, spec.bg_rates(), fault_schedule=sched,
+            recorder=obs.RecorderConfig(depth=max(n_win, 8)))
+        st_r, stats_r, ring = run_r(init_r(0), n_win)
+        reg = obs_metrics.Registry()
+        obs_metrics.export_link_stats(
+            reg, jax.tree_util.tree_map(np.asarray, stats_r.link),
+            backend="torus3d")
+        obs_report.write_run_dir(
+            os.path.join(trace_dir, "obs_microcircuit_%s" % name),
+            meta={"kind": "microcircuit", "dims": list(dims),
+                  "n_shards": 8, "fault": name, "windows": n_win,
+                  "window_us": cfg.window * cfg.params.dt * 1e3,
+                  "link_credits": cred},
+            recorder_rows=obs.global_rows(ring, 8),
+            fault_events=fabric_faults.transitions(sched),
+            registry=reg)
 base = rows[0]
 for r in rows:
     r["p99_degradation"] = round(
@@ -109,6 +135,8 @@ def main(report) -> None:
     # throttled to the bucket capacity: the admission invariant's floor
     # and low enough that faults actually contend for detour credits
     params["credits"] = params["capacity"]
+    if report.trace_dir:
+        params["trace_dir"] = os.path.abspath(report.trace_dir)
     spec = mc.MicrocircuitSpec(scale=params["scale"])
     report("microcircuit/neurons", spec.n_neurons, f"scale={spec.scale}")
     env = dict(os.environ)

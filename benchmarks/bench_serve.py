@@ -61,17 +61,34 @@ tenants = [TenantSpec("quiet", reserve=params["quiet_reserve"],
            TenantSpec("hot", reserve=params["hot_reserve"],
                       rate_epw=params["hot_rate"])]
 
-def run(hot_rate):
+def run(hot_rate, instrument=False):
     profiles = [TenantProfile("quiet", params["quiet_rate"]),
                 TenantProfile("hot", hot_rate, burst_factor=3.0,
                               burst_prob=0.25)]
     src = PoissonLoadGen(params["seed"], profiles, n, C)
-    eng = SpikeEngine(mesh, "w", tenants, cfg, src)
+    kw = {}
+    if instrument:
+        from repro.obs import recorder as obs_recorder
+        from repro.obs import spans as obs_spans
+        kw = dict(recorder=obs_recorder.RecorderConfig(
+                      depth=max(segments * params["seg_windows"] + 16, 32)),
+                  tracer=obs_spans.Tracer())
+    eng = SpikeEngine(mesh, "w", tenants, cfg, src, **kw)
     eng.warmup()
-    return eng.run(segments)
+    return eng, eng.run(segments)
 
-solo = run(0.0)                     # quiet tenant alone on the fabric
-rep = run(params["hot_rate"])       # + saturating bursty co-tenant
+_, solo = run(0.0)                  # quiet tenant alone on the fabric
+_, rep = run(params["hot_rate"])    # + saturating bursty co-tenant
+
+trace_dir = params.get("trace_dir")
+if trace_dir:
+    # untimed instrumented re-run of the contended case: flight recorder
+    # in the device carry + Perfetto span tracing on the host threads,
+    # decoded into an observability run directory
+    from repro.obs import report as obs_report
+    eng_t, rep_t = run(params["hot_rate"], instrument=True)
+    obs_report.write_engine_run(
+        os.path.join(trace_dir, "obs_serve_contended"), eng_t, rep_t)
 
 rows = []
 shape = "S=8 T=2 C={} W={}".format(C, rep.windows)
@@ -139,6 +156,8 @@ def main(report) -> None:
         "seed": 7,
         "bound": QOS_P99_BOUND,
     }
+    if report.trace_dir:
+        params["trace_dir"] = os.path.abspath(report.trace_dir)
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(

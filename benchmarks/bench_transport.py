@@ -105,18 +105,24 @@ for backend, opts, tag, meshname in cases:
 # whole scan divided by n_windows
 ''' + STUDY_SNIPPET + r'''
 
-for backend, opts, meshname in [
-        ("torus3d", {"nx": n3[0], "ny": n3[1], "nz": n3[2],
-                     "link_credits": cr}, "%dx%dx%d" % n3)]:
-    run = make_study(backend, opts)
-    link, lat = run()
+study_opts = {"nx": n3[0], "ny": n3[1], "nz": n3[2], "link_credits": cr}
+study_mesh = "%dx%dx%d" % n3
+base_med = None
+# the recorder variant threads the flight-recorder ring (+stall
+# attribution) through the same scan; its events_per_s against the plain
+# study row is the observability overhead bound docs/observability.md
+# cites (<5%)
+for depth, tag in [(None, ""), (N_WIN, "+recorder")]:
+    run = make_study("torus3d", study_opts, recorder_depth=depth)
+    out = run()
+    link, lat = out[0], out[1]
     med = median_ms(run)
     link = jax.tree_util.tree_map(np.asarray, link)
     sent = int(link.sent_events.sum() + link.unparked_events.sum())
     sbh = link.stalled_by_hop.sum((0, 1))
-    rows.append({
-        "backend": backend + "+credits*%dwin" % N_WIN,
-        "mesh": meshname,
+    row = {
+        "backend": "torus3d+credits%s*%dwin" % (tag, N_WIN),
+        "mesh": study_mesh,
         "shape": "S=8 N={} C={} W={}".format(N, C, N_WIN),
         "median_ms": med / N_WIN,
         "events_per_s": sent / (med * 1e-3) if med > 0 else 0.0,
@@ -131,7 +137,15 @@ for backend, opts, meshname in [
         # worst delivering window: late saturated windows may deliver
         # nothing at all (empty digest), so take the max over windows
         "latency_p99_us": round(float(np.asarray(lat.p99_us).max()), 3),
-    })
+    }
+    if depth is None:
+        base_med = med
+    else:
+        ring = jax.tree_util.tree_map(np.asarray, out[2])
+        row["ring_windows"] = int(ring.cursor[0])
+        row["recorder_overhead_pct"] = round(
+            (med - base_med) / base_med * 100.0, 2) if base_med else 0.0
+    rows.append(row)
 print("BENCH_JSON " + json.dumps(rows))
 '''
 
@@ -160,7 +174,8 @@ def main(report) -> None:
         extra = {k: row[k] for k in (
             "backend", "mesh", "credit_stalls", "hops", "forwarded_bytes",
             "stalled_by_hop", "parked", "dwell_us", "unparked",
-            "hop0_reentries", "latency_p99_us") if k in row}
+            "hop0_reentries", "latency_p99_us", "ring_windows",
+            "recorder_overhead_pct") if k in row}
         report.bench(
             "transport", row["backend"], f"mesh={row['mesh']} {row['shape']}",
             row["median_ms"], row["events_per_s"],

@@ -14,10 +14,15 @@ append-only, so it is safe on any machine.  The harness reports whether
 it was sourced (the ``REPRO_BENCH_ENV`` sentinel) in the CSV header.
 Output: ``name,value,notes`` CSV rows on stdout, plus machine-readable
 ``BENCH_<group>.json`` files (one JSON list of
-``{op, shape, median_ms, events_per_s, ...}`` rows per group, currently
-``kernels``, ``link``, ``transport``, ``wire``, ``serve`` and
+``{op, shape, median_ms, events_per_s, ..., provenance}`` rows per group,
+currently ``kernels``, ``link``, ``transport``, ``wire``, ``serve`` and
 ``microcircuit``) so the perf trajectory across PRs can be diffed without
-parsing the CSV.
+parsing the CSV.  Every row carries a ``provenance`` block (git SHA +
+dirty flag, jax/jaxlib versions, device count/platform, whether
+``tools/env.sh`` was sourced); ``tools/check_docs.py`` rejects committed
+artifacts without one.  ``--trace`` additionally writes observability
+run directories (``repro.obs``: flight-recorder rows, Perfetto trace,
+Prometheus metrics) for the modules that support it.
 
 ``--smoke`` runs a reduced module set with shrunk shapes — fast enough for
 the tier-1 time budget while still producing all the JSON files.  Smoke
@@ -57,8 +62,11 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
+
+from repro.obs import log as obs_log
 
 MODULES = [
     "bench_aggregation",
@@ -92,13 +100,45 @@ def median_ms(fn, *args, iters: int = 15) -> float:
     return times[len(times) // 2] * 1e3
 
 
+def provenance() -> dict:
+    """The provenance block stamped into every BENCH_*.json row: enough
+    to answer "what produced this number" when diffing the committed perf
+    trajectory across PRs.  Computed once per harness run
+    (``tools/check_docs.py`` rejects committed rows missing it)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def git(*args: str) -> str:
+        try:
+            out = subprocess.run(["git", *args], capture_output=True,
+                                 text=True, cwd=root, timeout=10)
+            return out.stdout.strip() if out.returncode == 0 else ""
+        except OSError:
+            return ""
+
+    import jax
+    import jaxlib
+    return {
+        "git_sha": git("rev-parse", "--short=12", "HEAD") or "unknown",
+        "git_dirty": bool(git("status", "--porcelain")),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "devices": jax.device_count(),
+        "platform": jax.default_backend(),
+        "env_tuned": os.environ.get("REPRO_BENCH_ENV", "0") != "0",
+    }
+
+
 class Reporter:
     """CSV reporter (the historical ``report(name, value, notes)`` callable)
     plus a structured ``bench()`` collector feeding BENCH_<group>.json.
-    Modules consult ``.smoke`` to shrink their workload."""
+    Modules consult ``.smoke`` to shrink their workload and ``.trace_dir``
+    (non-None when ``--trace`` is set) to write observability run
+    directories next to the JSON artifacts."""
 
-    def __init__(self, smoke: bool = False):
+    def __init__(self, smoke: bool = False, trace_dir: str | None = None):
         self.smoke = smoke
+        self.trace_dir = trace_dir
+        self.provenance = provenance()
         self._groups: dict[str, list[dict]] = {}
 
     def __call__(self, name, value, notes=""):
@@ -117,18 +157,20 @@ class Reporter:
             row["notes"] = notes
         if extra:
             row.update(extra)
+        row["provenance"] = self.provenance
         self._groups.setdefault(group, []).append(row)
         note = f"{row.get('events_per_s', '')} ev/s {notes}".strip()
         self(f"{group}/{op}/{shape}/median_ms", round(med_ms, 4), note)
 
     def dump(self, out_dir: str):
+        log = obs_log.get_logger(__name__)
         os.makedirs(out_dir, exist_ok=True)
         for group, rows in self._groups.items():
             path = os.path.join(out_dir, f"BENCH_{group}.json")
             with open(path, "w") as f:
                 json.dump(rows, f, indent=1)
                 f.write("\n")
-            print(f"# wrote {path} ({len(rows)} rows)", file=sys.stderr)
+            log.info("wrote %s (%d rows)", path, len(rows))
 
 
 def main() -> None:
@@ -141,11 +183,20 @@ def main() -> None:
                          "(default: repo root for full runs, /tmp/bench "
                          "for --smoke so toy numbers can never clobber "
                          "the committed full-shape artifacts)")
+    ap.add_argument("--trace", action="store_true",
+                    help="write observability run directories (flight-"
+                         "recorder rows, Perfetto trace, metrics) next to "
+                         "the JSON artifacts for modules that support it")
+    obs_log.add_log_args(ap)
     args = ap.parse_args()
     if args.out_dir is None:
         args.out_dir = "/tmp/bench" if args.smoke else "."
+    # progress lines (module wall times, artifact writes) default to INFO
+    # on stderr; stdout carries only the CSV / BENCH_JSON protocols
+    obs_log.setup_logging("INFO", quiet=args.quiet, verbose=args.verbose)
 
-    report = Reporter(smoke=args.smoke)
+    report = Reporter(smoke=args.smoke,
+                      trace_dir=args.out_dir if args.trace else None)
     modules = SMOKE_MODULES if args.smoke else MODULES
 
     print("name,value,notes")

@@ -166,6 +166,52 @@ def node_fault(dims, n_windows: int, node: int, *, start: int = 0,
     return FaultSchedule(jnp.asarray(down))
 
 
+AXIS_NAMES = "xyz"
+
+
+def link_label(dims, lid: int) -> str:
+    """Human label of a directed link id, e.g. ``"n3:x+"``.
+
+    Inverse of :func:`link_id` for display: node-major ids, directions
+    ordered ``x+, x-, y+, y-, z+, z-`` — what the observability report
+    (``repro.obs.report``) prints for its top-congested-links table.
+    """
+    dims = tuple(int(d) for d in dims)
+    nl = 2 * len(dims)
+    node, direction = divmod(int(lid), nl)
+    axis, sign = divmod(direction, 2)
+    return f"n{node}:{AXIS_NAMES[axis]}{'+' if sign == 0 else '-'}"
+
+
+def transitions(schedule: FaultSchedule) -> list[dict]:
+    """Host-side fault timeline: one event per link state CHANGE.
+
+    Diffs consecutive mask rows (window 0 against an all-healthy fabric)
+    into JSON-serializable events the observability report merges onto
+    the window timeline::
+
+        {"window": w, "event": "link_down" | "link_up",
+         "links": [lid, ...]}
+
+    A healthy schedule yields ``[]``; a flap yields alternating
+    down/up pairs.  Link ids decode with :func:`link_label`.
+    """
+    down = np.asarray(schedule.link_down, bool)
+    prev = np.zeros((down.shape[1],), bool)
+    events: list[dict] = []
+    for w in range(down.shape[0]):
+        died = np.flatnonzero(down[w] & ~prev)
+        healed = np.flatnonzero(~down[w] & prev)
+        if died.size:
+            events.append({"window": int(w), "event": "link_down",
+                           "links": died.astype(int).tolist()})
+        if healed.size:
+            events.append({"window": int(w), "event": "link_up",
+                           "links": healed.astype(int).tolist()})
+        prev = down[w]
+    return events
+
+
 def chaos(dims, n_windows: int, seed: int, *,
           revive_p: float = 0.5) -> FaultSchedule:
     """Seeded chaos: every window kills one uniformly random cable, and

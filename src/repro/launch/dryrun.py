@@ -38,6 +38,7 @@ from repro.launch import roofline as rf
 from repro.models.model import build
 from repro.models.modules import param_bytes
 from repro.models.transformer import Runtime
+from repro.obs import log as obs_log
 from repro.train import optimizer as opt_lib
 from repro.train import step as step_lib
 
@@ -307,13 +308,14 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
         roofline=terms.to_dict(),
     )
     if verbose:
-        print(f"[{report['mesh']}] {arch} x {shape_name}: OK "
-              f"({report['compile_s']}s compile, "
-              f"{args_bytes / 1e9:.2f} GB/chip state, "
-              f"bottleneck={terms.bottleneck}, "
-              f"frac={terms.roofline_fraction:.3f})")
-        print("  memory_analysis:", mem_d)
-        print("  collective bytes:", coll["bytes_by_kind"])
+        log = obs_log.get_logger(__name__)
+        log.info("[%s] %s x %s: OK (%ss compile, %.2f GB/chip state, "
+                 "bottleneck=%s, frac=%.3f)",
+                 report["mesh"], arch, shape_name, report["compile_s"],
+                 args_bytes / 1e9, terms.bottleneck,
+                 terms.roofline_fraction)
+        log.info("  memory_analysis: %s", mem_d)
+        log.info("  collective bytes: %s", coll["bytes_by_kind"])
     del compiled, lowered, jitted
     return report
 
@@ -333,7 +335,9 @@ def main():
     ap.add_argument("--grad-rs", action="store_true",
                     help="constrain grads to param sharding (RS not AR)")
     ap.add_argument("--out", default=None)
+    obs_log.add_log_args(ap)
     args = ap.parse_args()
+    obs_log.setup_logging("INFO", quiet=args.quiet, verbose=args.verbose)
 
     cells = []
     if args.all:
@@ -367,8 +371,9 @@ def main():
     ok = sum(r["status"] == "ok" for r in reports)
     sk = sum(r["status"] == "skipped" for r in reports)
     err = sum(r["status"] == "error" for r in reports)
-    print(f"\ndry-run: {ok} ok, {sk} skipped, {err} errors "
-          f"/ {len(reports)} cells")
+    obs_log.get_logger(__name__).info(
+        "dry-run: %d ok, %d skipped, %d errors / %d cells",
+        ok, sk, err, len(reports))
     return 1 if err else 0
 
 

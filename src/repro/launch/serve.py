@@ -19,7 +19,11 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--fake-devices", type=int, default=0)
+    from repro.obs import log as obs_log
+    obs_log.add_log_args(ap)
     args = ap.parse_args()
+    log = obs_log.setup_logging("INFO", quiet=args.quiet,
+                                verbose=args.verbose)
 
     if args.fake_devices:
         os.environ["XLA_FLAGS"] = (
@@ -55,7 +59,8 @@ def main():
             extras=extras or None))
     out = eng.generate_batch(params, reqs)
     for rid in sorted(out):
-        print(f"req {rid}: {len(out[rid])} tokens -> {list(out[rid][:10])}")
+        log.info("req %d: %d tokens -> %s",
+                 rid, len(out[rid]), list(out[rid][:10]))
     return 0
 
 

@@ -36,7 +36,13 @@ def main():
     ap.add_argument("--fake-devices", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
+    from repro.obs import log as obs_log
+    obs_log.add_log_args(ap)
     args = ap.parse_args()
+    # progress defaults to INFO on stderr (a launcher's progress is not a
+    # machine protocol; --quiet silences it)
+    log = obs_log.setup_logging("INFO", quiet=args.quiet,
+                                verbose=args.verbose)
 
     if args.fake_devices:
         os.environ["XLA_FLAGS"] = (
@@ -86,10 +92,11 @@ def main():
                       rt=rt, mesh=mesh, state_shardings=state_sh)
     state, history = trainer.run(seed=0)
     for h in history:
-        print(f"step {h['step']:5d} loss {h['loss']:.4f} lr {h['lr']:.2e} "
-              f"dt {h['dt'] * 1e3:.0f}ms stalls {h['producer_stalls']}")
-    print(f"done: {args.steps} steps; straggler events: "
-          f"{trainer.straggler_events}")
+        log.info("step %5d loss %.4f lr %.2e dt %.0fms stalls %d",
+                 h["step"], h["loss"], h["lr"], h["dt"] * 1e3,
+                 h["producer_stalls"])
+    log.info("done: %d steps; straggler events: %d",
+             args.steps, trainer.straggler_events)
     return 0
 
 

@@ -1,0 +1,35 @@
+"""Unified observability: flight recorder, span tracing, metrics, report.
+
+Three layers, one subsystem (ISSUE 9 — the instrumentation substrate the
+scale-up and adaptive-routing work reports through):
+
+* ``repro.obs.recorder`` — the device-side **flight recorder**: a
+  static-shape per-window telemetry ring carried through the simulator /
+  serving-engine ``lax.scan`` (off by default; the disabled path leaves
+  the carry pytree and lowered HLO bit-identical to an uninstrumented
+  build) and exported to the host at segment boundaries.
+* ``repro.obs.spans`` — Chrome-trace-event / Perfetto JSON **span
+  tracing** for host threads and device segments, correlated with the
+  recorder timeline via the wire word's absolute-window meta lane.
+* ``repro.obs.metrics`` — a small counter/gauge/histogram **registry**
+  with Prometheus text exposition and JSONL snapshots, fed from
+  ``LinkStats`` / ``WindowStats`` / engine ledgers.
+* ``repro.obs.report`` — ``python -m repro.obs.report <run-dir>``:
+  top-congested links, per-tenant latency/SLO burn and fault/reroute
+  events merged onto one window timeline.
+* ``repro.obs.log`` — the library-wide ``logging`` setup (stderr only:
+  benchmark stdout stays machine-readable).
+"""
+from repro.obs.log import get_logger, setup_logging
+from repro.obs.metrics import Registry, parse_prometheus, prometheus_text
+from repro.obs.recorder import (COUNTER_FIELDS, RecorderConfig,
+                                TelemetryRing, counter_totals, global_rows,
+                                record, ring_init, ring_rows, ring_shard)
+from repro.obs.spans import Tracer, validate_trace
+
+__all__ = [
+    "COUNTER_FIELDS", "RecorderConfig", "Registry", "TelemetryRing",
+    "Tracer", "counter_totals", "get_logger", "global_rows",
+    "parse_prometheus", "prometheus_text", "record", "ring_init",
+    "ring_rows", "ring_shard", "setup_logging", "validate_trace",
+]

@@ -10,6 +10,15 @@ The request/response path reuses the paper's disciplines:
 Decode runs one jitted step for the whole slot batch; finished sequences
 are swapped out and their slot refilled from the queue (prefill on
 admission), which is continuous batching in its simplest honest form.
+
+.. deprecated::
+    This is the legacy token-serving engine, kept for the LLM-side
+    launch tooling.  Spike-stream serving (the paper's workload) lives in
+    ``repro.serve.spike_engine.SpikeEngine``, which owns the streaming
+    ingest/device thread pattern, tenancy QoS and the observability
+    integration; new serving work should build there.  This engine only
+    carries the shared span API (``tracer=``) so its waves show up on the
+    same Perfetto timeline.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.models.transformer import Runtime
+from repro.obs import spans as obs_spans
 
 
 @dataclasses.dataclass
@@ -42,10 +52,12 @@ class Request:
 
 class Engine:
     def __init__(self, model: Model, cfg: ServeConfig,
-                 rt: Runtime | None = None, seed: int = 0):
+                 rt: Runtime | None = None, seed: int = 0,
+                 tracer: obs_spans.Tracer | None = None):
         self.model = model
         self.cfg = cfg
         self.rt = rt or Runtime()
+        self.tracer = tracer if tracer is not None else obs_spans.NULL
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(
             lambda p, c, t: model.decode(p, c, t, self.rt))
@@ -82,18 +94,24 @@ class Engine:
                     batch.update({k: jnp.asarray(v)
                                   for k, v in r.extras.items()})
             caches = self.model.init_caches(B, self.cfg.max_len)
-            h, caches = self._prefill(params, batch, caches)
-            logits = self.model.logits(params, h[:, -1:, :], self.rt)
+            with self.tracer.span("serve/prefill", track="serve",
+                                  batch=B, prompt_len=S):
+                h, caches = self._prefill(params, batch, caches)
+                logits = self.model.logits(params, h[:, -1:, :], self.rt)
             tok = self._sample(logits)
             gen = [tok]
             done = np.zeros((B,), bool)
-            for _ in range(self.cfg.max_new_tokens - 1):
-                logits, caches = self._decode(params, caches, tok[:, None])
-                tok = self._sample(logits)
-                gen.append(tok)
-                done |= np.asarray(tok) == self.cfg.eos_id
-                if done.all():
-                    break
+            with self.tracer.span("serve/decode", track="serve",
+                                  batch=B) as sp:
+                for _ in range(self.cfg.max_new_tokens - 1):
+                    logits, caches = self._decode(params, caches,
+                                                  tok[:, None])
+                    tok = self._sample(logits)
+                    gen.append(tok)
+                    done |= np.asarray(tok) == self.cfg.eos_id
+                    if done.all():
+                        break
+                sp.args["tokens"] = len(gen)
             g = np.stack([np.asarray(t) for t in gen], axis=1)
             for j, r in enumerate(wave):
                 seq = g[j]

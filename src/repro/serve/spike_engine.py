@@ -34,7 +34,6 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from typing import NamedTuple, Sequence
 
 import jax
@@ -45,6 +44,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.fabric import faults as fabric_faults
+from repro.obs import recorder as obs_recorder
+from repro.obs import spans as obs_spans
 from repro.serve import tenancy
 from repro.wire import codec
 from repro.wire import latency as wire_latency
@@ -119,13 +120,20 @@ class SpikeEngine:
     def __init__(self, mesh, axis_name: str,
                  tenants: Sequence[tenancy.TenantSpec],
                  cfg: EngineConfig, source,
-                 fault_schedule: fabric_faults.FaultSchedule | None = None):
+                 fault_schedule: fabric_faults.FaultSchedule | None = None,
+                 recorder: obs_recorder.RecorderConfig | None = None,
+                 tracer: obs_spans.Tracer | None = None):
         self.mesh = mesh
         self.axis_name = axis_name
         self.tenants = tuple(tenants)
         self.cfg = cfg
         self.source = source
         self.fault_schedule = fault_schedule
+        # Observability is strictly opt-in: with recorder=None the device
+        # carry is the same 4-tuple (and lowers to the same HLO) as an
+        # uninstrumented build; the NULL tracer appends nothing.
+        self.recorder = recorder
+        self.tracer = tracer if tracer is not None else obs_spans.NULL
         S = int(np.prod([mesh.shape[a] for a in mesh.shape]))
         T = len(self.tenants)
         if getattr(source, "n_tenants", T) != T:
@@ -140,7 +148,8 @@ class SpikeEngine:
             S, self.tenants, link_credits=cfg.link_credits,
             notify_latency=cfg.notify_latency, nx=cfg.nx, ny=cfg.ny,
             nz=cfg.nz, max_row_events=cfg.capacity,
-            wire_format=cfg.wire_format)
+            wire_format=cfg.wire_format,
+            stall_attribution=recorder is not None)
         self.ledger = tenancy.TenantLedger([t.name for t in self.tenants])
         self._build_device_fns()
         self._reset_runtime()
@@ -179,13 +188,24 @@ class SpikeEngine:
                 lat.reshape(T, -1), live.reshape(T, -1).astype(jnp.int32))
             return summary, jnp.sum(out.recv_counts, axis=-1)
 
-        def seg_fn(state, bw, bm, bc, fw, fc_, win0):
+        rec = self.recorder is not None
+
+        def seg_fn(state, bw, bm, bc, *rest):
+            # rest is (ring, fw, fc_, win0) when the flight recorder rides
+            # the carry, (fw, fc_, win0) otherwise — recorder=None keeps
+            # the traced arity (and the lowered HLO) of an uninstrumented
+            # build.
             state = jax.tree.map(lambda a: a[0], state)
             bw, bm, bc = bw[0], bm[0], bc[0]
-            fw, fc_ = fw[0], fc_[0]      # (nw, T, n, C) / (nw, T, n)
+            ring = jax.tree.map(lambda a: a[0], rest[0]) if rec else None
+            fw, fc_ = rest[-3][0], rest[-2][0]  # (nw, T, n, C) / (nw, T, n)
+            win0 = rest[-1]
 
             def window(carry, x):
-                state, bw, bm, bc = carry
+                if rec:
+                    state, bw, bm, bc, ring = carry
+                else:
+                    state, bw, bm, bc = carry
                 fw_w, fc_w, i = x
                 win_abs = win0 + i
                 # FIFO merge: backlog (last window's deferred row) first,
@@ -215,6 +235,9 @@ class SpikeEngine:
                          jnp.where(keep, cnt, 0))
                 summary, delivered = attribute(out, win_abs)
                 st = out.stats
+                if rec:
+                    carry = carry + (obs_recorder.record(
+                        ring, win_abs, st, out.state, summary.hist),)
                 ws = WindowServeStats(
                     offered=st.offered_events, sent=st.sent_events,
                     deferred=st.deferred_events,
@@ -224,8 +247,8 @@ class SpikeEngine:
                     latency=summary)
                 return carry, ws
 
-            carry, ws = lax.scan(window, (state, bw, bm, bc),
-                                 (fw, fc_, jnp.arange(nw)))
+            init = (state, bw, bm, bc) + ((ring,) if rec else ())
+            carry, ws = lax.scan(window, init, (fw, fc_, jnp.arange(nw)))
             lift = lambda t: jax.tree.map(lambda a: a[None], t)
             return lift(carry), lift(ws)
 
@@ -247,9 +270,10 @@ class SpikeEngine:
                           s2, d2.astype(jnp.int32))))
 
         spec = P(ax)
+        n_carry = 5 if rec else 4
         self._seg = jax.jit(shard_map(
             seg_fn, mesh=self.mesh,
-            in_specs=(spec, spec, spec, spec, spec, spec, P()),
+            in_specs=(spec,) * n_carry + (spec, spec, P()),
             out_specs=(spec, spec), check_rep=False))
         self._drain_walk = jax.jit(shard_map(
             drain_fn, mesh=self.mesh,
@@ -267,6 +291,15 @@ class SpikeEngine:
                        jnp.zeros((S, T, S, C), jnp.uint32),
                        jnp.zeros((S, T, S, C), jnp.int32),
                        jnp.zeros((S, T, S), jnp.int32))
+        if self.recorder is not None:
+            # the flight-recorder ring rides as the 5th carry element;
+            # credit lanes carry partition slots ((T+1)*K), the stall
+            # lane stays physical (K directed links)
+            ring0 = obs_recorder.ring_init(
+                self.recorder.depth, state0, (T,),
+                (T, wire_latency.N_LATENCY_BINS),
+                S * self.transport.n_links)
+            self._carry = self._carry + (jax.tree.map(bcast, ring0),)
         # pinned staging pair: preallocated, filled in place by the
         # ingestion thread, handed to the device via jnp.asarray (the
         # host->device copy; on accelerators device_put from these fixed
@@ -293,13 +326,15 @@ class SpikeEngine:
         wbuf, cbuf = self._words_buf[slot], self._counts_buf[slot]
         inj = np.zeros((self.n_tenants,), np.int64)
         clip = np.zeros((self.n_tenants,), np.int64)
-        for i in range(nw):
-            tr = self.source.next_window(seg * nw + i)
-            # shard s offers rows (tenant, dst) = traffic[:, s, :]
-            cbuf[:, i] = tr.counts.transpose(1, 0, 2)
-            wbuf[:, i] = tr.words.transpose(1, 0, 2, 3)
-            inj += tr.counts.astype(np.int64).sum((1, 2))
-            clip += tr.clipped
+        with self.tracer.span("ingest/fill", track="spike-ingest",
+                              seg=seg, win0=seg * nw):
+            for i in range(nw):
+                tr = self.source.next_window(seg * nw + i)
+                # shard s offers rows (tenant, dst) = traffic[:, s, :]
+                cbuf[:, i] = tr.counts.transpose(1, 0, 2)
+                wbuf[:, i] = tr.words.transpose(1, 0, 2, 3)
+                inj += tr.counts.astype(np.int64).sum((1, 2))
+                clip += tr.clipped
         return inj, clip
 
     def _ingest_loop(self):
@@ -309,10 +344,15 @@ class SpikeEngine:
                 if (self._max_segments is not None
                         and seg >= self._max_segments):
                     break
+                t0 = self.tracer.now_us()
                 try:
                     slot = self._free_q.get(timeout=0.05)
                 except queue.Empty:
                     continue
+                self.tracer.complete("ingest/slot_wait", t0,
+                                     self.tracer.now_us() - t0,
+                                     track="spike-ingest", cat="host",
+                                     slot=slot)
                 inj, clip = self._fill_segment(slot, seg)
                 self._staged_q.put((slot, inj, clip))
                 seg += 1
@@ -322,32 +362,55 @@ class SpikeEngine:
     def _device_loop(self):
         prev = None
         while True:
-            item = self._staged_q.get()
+            with self.tracer.span("device/staged_wait",
+                                  track="spike-device"):
+                item = self._staged_q.get()
             if item is None:
                 break
             slot, inj, clip = item
             # copy=True matters: zero-copy host->device aliasing would
             # let the ingest thread overwrite the slot mid-read
-            fw = jnp.array(self._words_buf[slot], copy=True)
-            fc_ = jnp.array(self._counts_buf[slot], copy=True)
+            with self.tracer.span("device/h2d", track="spike-device",
+                                  slot=slot):
+                fw = jnp.array(self._words_buf[slot], copy=True)
+                fc_ = jnp.array(self._counts_buf[slot], copy=True)
             self._free_q.put(slot)       # staging slot reusable: the
             #                              host->device copy is done
-            self._carry, ws = self._seg(*self._carry, fw, fc_,
-                                        jnp.int32(self._win))
+            win0 = self._win
+            with self.tracer.span("device/dispatch", track="spike-device",
+                                  win0=win0):
+                self._carry, ws = self._seg(*self._carry, fw, fc_,
+                                            jnp.int32(self._win))
             self._win += self.cfg.seg_windows
             self._windows += self.cfg.seg_windows
             self.ledger.add_injected(inj, clip)
             if prev is not None:         # absorb k-1 while k runs
-                self._absorb(prev)
-            prev = ws
+                self._absorb(*prev)
+            prev = (ws, win0)
         if prev is not None:
-            self._absorb(prev)
-        self._t1 = time.perf_counter()
+            self._absorb(*prev)
+        self._t1 = self.tracer.now_us()
 
-    def _absorb(self, ws: WindowServeStats):
+    def _absorb(self, ws: WindowServeStats, win0: int | None = None):
+        t0 = self.tracer.now_us()
         ws = jax.tree.map(np.asarray, ws)        # blocks until ready
         self.ledger.add_windows(ws.delivered, ws.shed, ws.latency.hist,
                                 ws.latency.max_us, ws.latency.mean_us)
+        if self.tracer.enabled and win0 is not None:
+            # the absorb block is where the host observes the async
+            # segment completing; its bounds stand in for the device
+            # segment on the trace, and the per-window instants carry
+            # the same absolute window indices the wire words' meta lane
+            # (and the flight-recorder ring) are stamped with
+            nw = self.cfg.seg_windows
+            self.tracer.complete("device/segment", t0,
+                                 self.tracer.now_us() - t0, track="device",
+                                 win0=win0, windows=nw)
+            delivered = ws.delivered.sum(axis=(0, 2))      # (nw,)
+            for i in range(nw):
+                self.tracer.instant("window", track="device", cat="device",
+                                    window=win0 + i,
+                                    delivered=int(delivered[i]))
 
     # -- lifecycle ---------------------------------------------------------
     def start(self, max_segments: int | None = None):
@@ -356,7 +419,7 @@ class SpikeEngine:
         if self._ingest_t is not None:
             raise RuntimeError("engine already started")
         self._max_segments = max_segments
-        self._t0 = time.perf_counter()
+        self._t0 = self.tracer.now_us()
         self._ingest_t = threading.Thread(target=self._ingest_loop,
                                           name="spike-ingest", daemon=True)
         self._device_t = threading.Thread(target=self._device_loop,
@@ -381,6 +444,20 @@ class SpikeEngine:
         pc = np.asarray(self._carry[0].parked_count)
         return int(pc[0].sum()) if pc.size else 0
 
+    def recorder_rows(self, shard: int | None = None) -> list[dict]:
+        """Decode the flight-recorder ring (requires ``recorder=``).
+
+        ``shard=None`` returns global per-window rows (counter/hist lanes
+        summed across shards); an integer returns that shard's raw view.
+        """
+        if self.recorder is None:
+            raise RuntimeError("engine was built without a flight "
+                               "recorder (pass recorder=RecorderConfig())")
+        ring = self._carry[4]
+        if shard is None:
+            return obs_recorder.global_rows(ring, self.n_shards)
+        return obs_recorder.ring_rows(obs_recorder.ring_shard(ring, shard))
+
     def _drain(self):
         """Quiesce: zero-traffic segments until backlog and fabric empty
         (bounded), then the final uncredited walk via ``drain_fabric``."""
@@ -388,23 +465,28 @@ class SpikeEngine:
         for _ in range(self.cfg.max_drain_segments):
             if self.backlog_events() == 0 and self.in_fabric_events() == 0:
                 break
+            win0 = self._win
             self._carry, ws = self._seg(*self._carry, self._zero_fw,
                                         self._zero_fc, jnp.int32(self._win))
             self._win += nw
             self._drain_windows += nw
-            self._absorb(ws)
-        state, (s1, d1, s2, d2) = self._drain_walk(*self._carry[:4],
-                                                   jnp.int32(self._win))
-        zero = np.zeros_like(np.asarray(d1))
-        for s, d in ((s1, d1), (s2, d2)):
-            self.ledger.add_windows(np.asarray(d), zero,
-                                    np.asarray(s.hist),
-                                    np.asarray(s.max_us),
-                                    np.asarray(s.mean_us))
+            self._absorb(ws, win0)
+        with self.tracer.span("drain/walk", track="spike-device",
+                              win0=self._win):
+            state, (s1, d1, s2, d2) = self._drain_walk(*self._carry[:4],
+                                                       jnp.int32(self._win))
+            zero = np.zeros_like(np.asarray(d1))
+            for s, d in ((s1, d1), (s2, d2)):
+                self.ledger.add_windows(np.asarray(d), zero,
+                                        np.asarray(s.hist),
+                                        np.asarray(s.max_us),
+                                        np.asarray(s.mean_us))
+        # the flight-recorder ring (carry[4:], when enabled) survives the
+        # reset so post-run decoding sees the full served history
         self._carry = (state,
                        jnp.zeros_like(self._carry[1]),
                        jnp.zeros_like(self._carry[2]),
-                       jnp.zeros_like(self._carry[3]))
+                       jnp.zeros_like(self._carry[3])) + self._carry[4:]
 
     def stop(self, drain: bool = True, timeout: float = 120.0
              ) -> EngineReport:
@@ -423,7 +505,7 @@ class SpikeEngine:
         if drain:
             self._drain()
             self.ledger.check_conservation()
-        wall = max(self._t1 - self._t0, 1e-9)
+        wall = max((self._t1 - self._t0) / 1e6, 1e-9)
         report = EngineReport(
             tenants=self.ledger.digests(),
             injected=self.ledger.injected.copy(),

@@ -66,11 +66,14 @@ def build_fabric(n_shards: int, tenants: Sequence[TenantSpec], *,
                  link_credits: int, notify_latency: int = 2,
                  nx: int = 0, ny: int = 0, nz: int = 0,
                  max_row_events: int = 0,
-                 wire_format: str = "extoll") -> TenantTorusTransport:
+                 wire_format: str = "extoll",
+                 stall_attribution: bool = False) -> TenantTorusTransport:
     """Build the shared 3-D torus with per-tenant credit partitioning.
 
     Dimensions default to the most-cubic factorization of ``n_shards``
     (the paper's wafer-stack arrangement passes nx/ny/nz explicitly).
+    ``stall_attribution`` opts into the per-link deferred-demand table
+    the flight recorder snapshots (``LinkStats.stalled_by_link``).
     """
     dims = (nx, ny, nz)
     if not all(dims):
@@ -84,7 +87,8 @@ def build_fabric(n_shards: int, tenants: Sequence[TenantSpec], *,
         partition=credit_partition(tenants, link_credits),
         notify_latency=notify_latency,
         max_row_events=max_row_events,
-        wire_format=wire_format)
+        wire_format=wire_format,
+        stall_attribution=stall_attribution)
 
 
 class TenantDigest(NamedTuple):
@@ -167,3 +171,48 @@ class TenantLedger:
                 hist=self.hist[t].copy(),
             ))
         return out
+
+    def export_metrics(self, registry) -> None:
+        """Feed the run-level per-tenant ledger into an
+        ``repro.obs.metrics.Registry`` (delivered/injected/shed counters,
+        the latency histogram, and a p99 gauge per tenant)."""
+        from repro.obs import metrics as obs_metrics
+        obs_metrics.export_tenant_digests(registry, self.digests())
+        inj = registry.counter(
+            "tenant_injected_events_total",
+            "Events staged to the device, per tenant.",
+            labels=("tenant",))
+        shed = registry.counter(
+            "tenant_shed_events_total",
+            "Fresh events dropped beyond the backlog bound, per tenant.",
+            labels=("tenant",))
+        for t, name in enumerate(self.names):
+            inj.inc(int(self.injected[t]), tenant=name)
+            shed.inc(int(self.shed[t]), tenant=name)
+
+
+def tenant_rows(specs: Sequence[TenantSpec], ledger: TenantLedger,
+                notify_latency: int) -> list[dict]:
+    """JSON-serializable per-tenant rows (the run directory's
+    ``tenants.jsonl``): QoS contract + conservation ledger + latency
+    digest side by side, so the observability report can render SLO
+    burn (offered vs guaranteed rate) next to the measured p99."""
+    rows = []
+    for spec, d in zip(specs, ledger.digests()):
+        t = ledger.names.index(spec.name)
+        rows.append({
+            "tenant": spec.name,
+            "reserve": int(spec.reserve),
+            "rate_epw": float(spec.rate_epw),
+            "guaranteed_epw": guaranteed_epw(spec, notify_latency),
+            "injected": int(ledger.injected[t]),
+            "delivered": d.delivered,
+            "shed": int(ledger.shed[t]),
+            "clipped": int(ledger.clipped[t]),
+            "p50_us": d.p50_us,
+            "p99_us": d.p99_us,
+            "max_us": d.max_us,
+            "mean_us": d.mean_us,
+            "hist": d.hist.astype(int).tolist(),
+        })
+    return rows

@@ -57,6 +57,7 @@ from repro import transport as tp
 from repro import wire
 from repro.core import aggregator, events as ev
 from repro.fabric import faults as fabric_faults
+from repro.obs import recorder as obs_recorder
 from repro.core.routing import RoutingTables
 from repro.snn import lif, network
 
@@ -234,7 +235,7 @@ def _apply_events(state: ShardState, words: jax.Array, counts: jax.Array,
 
 def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
                       fault_schedule: fabric_faults.FaultSchedule | None
-                      = None):
+                      = None, recorder=None):
     """Build the pipelined per-window machinery (axis_name=None -> single
     shard, no collective).
 
@@ -245,15 +246,27 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
     event its ACTUAL traversed links (detours included) instead of the
     static shortest-route hop count — see ``docs/architecture.md``.
 
-    Returns ``(init_pending, init_link, body, drain)``:
+    ``recorder`` (a ``repro.obs.RecorderConfig``) enables the device-side
+    flight recorder: the scan carry gains a ``TelemetryRing`` 4th element
+    and each window appends its window index, LinkStats deltas, credit /
+    parked_by_link occupancy and latency-histogram delta.  Credited torus
+    backends are additionally built with ``stall_attribution=True`` so
+    the ring's per-link congestion lane is populated.  ``None`` (the
+    default) compiles the EXACT pre-observability program — carry pytree
+    and HLO are pinned bit-identical by ``tests/test_obs.py``.
+
+    Returns ``(init_pending, init_link, body, drain, init_ring)``:
       init_pending()          -> empty PendingWindow carry half
       init_link()             -> transport flow-control state carry half
-      body((state, pending, link), ...) -> ((state, pending', link'),
-                                            WindowStats)
+      body((state, pending, link[, ring]), ...)
+                              -> ((state, pending', link'[, ring']),
+                                  WindowStats)
       drain(state, pending, link, ...)  -> (state, deadline_misses) flushing
                                             the final window's buckets after
                                             the scan (credits bypassed: the
                                             fabric quiesces).
+      init_ring               -> empty TelemetryRing carry element, or
+                                 None when the recorder is disabled
     """
     if axis_name is not None:
         opts = {"wire_format": cfg.wire_format}
@@ -264,6 +277,8 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
                         max_row_events=cfg.capacity)  # livelock guard
             if cfg.transport == "torus3d":
                 opts["nz"] = cfg.torus_nz
+            if recorder is not None and cfg.link_credits > 0:
+                opts["stall_attribution"] = True
         backend = tp.create(cfg.transport, n_shards=cfg.n_shards, **opts)
     else:
         backend = tp.Transport(cfg.n_shards, wire_format=cfg.wire_format)
@@ -351,7 +366,16 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
 
     def body(carry, tables: RoutingTables, w_exc, w_inh, delays, bg_rate,
              bg_w):
-        state, pend, lstate = carry
+        if recorder is not None:
+            state, pend, lstate, ring = carry
+            # the exchange below ships window k-1's buckets: at entry
+            # state.t sits at window k's start, so the record is stamped
+            # with the EXCHANGED window's absolute index (row 0 is the
+            # empty bootstrap exchange, index -1 — the same one-row shift
+            # WindowStats carries)
+            win_rec = state.t // cfg.window - 1
+        else:
+            state, pend, lstate = carry
         # 1. exchange + decode window k-1 (same systemtime as unpipelined:
         #    state.t here == that window's end); the route/aggregate below
         #    never reads the collective's result, so the two can overlap.
@@ -412,9 +436,13 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
             link=lstats,
             latency=latency,
         )
-        return (state, PendingWindow(b.data, b.guids, b.counts, fw.residue,
-                                     fw.residue_meta),
-                lstate), stats
+        pend_out = PendingWindow(b.data, b.guids, b.counts, fw.residue,
+                                 fw.residue_meta)
+        if recorder is not None:
+            ring = obs_recorder.record(ring, win_rec, lstats, lstate,
+                                       latency.hist)
+            return (state, pend_out, lstate, ring), stats
+        return (state, pend_out, lstate), stats
 
     def drain(state: ShardState, pend: PendingWindow, lstate: tp.LinkState,
               w_exc, w_inh):
@@ -445,7 +473,16 @@ def make_pipeline_fns(cfg: SimConfig, *, axis_name: str | None,
         state, miss = _decode(state, recv, counts, w_exc, w_inh)
         return state, miss_total + miss.astype(jnp.int32)
 
-    return init_pending, init_link, body, drain
+    if recorder is not None:
+        def init_ring():
+            lst = init_link()
+            return obs_recorder.ring_init(
+                recorder.depth, lst, (), (wire.N_LATENCY_BINS,),
+                lst.bank.credits.shape[0])
+    else:
+        init_ring = None
+
+    return init_pending, init_link, body, drain, init_ring
 
 
 class SimCarry(NamedTuple):
@@ -453,18 +490,26 @@ class SimCarry(NamedTuple):
     the window pipeline threads through ``lax.scan`` — neuron/ring state,
     the pipelined pending buckets + residue, and the fabric's link
     flow-control state (credits, pending notifies, parked rows).  All
-    leaves are stacked with a leading ``n_shards`` axis (``P(axis)``)."""
+    leaves are stacked with a leading ``n_shards`` axis (``P(axis)``).
+
+    ``ring`` is the flight recorder's telemetry ring — present only when
+    the simulator is built with ``recorder=RecorderConfig(...)``; the
+    default ``None`` is a leafless pytree node, so uninstrumented carries
+    keep the exact pre-observability structure (pinned by
+    ``tests/test_obs.py``)."""
 
     state: ShardState
     pending: PendingWindow
     link: tp.LinkState
+    ring: obs_recorder.TelemetryRing | None = None
 
 
 def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
                            part: network.Partition, bg_rates: np.ndarray,
                            bg_weight: float = 87.8,
                            fault_schedule: fabric_faults.FaultSchedule |
-                           None = None):
+                           None = None,
+                           recorder=None):
     """Segment-granular jitted simulator over a device mesh.
 
     The whole-run scan of :func:`build_sharded_sim` is a special case of
@@ -509,27 +554,34 @@ def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
                          for t in tabs])
     bg = jnp.asarray(np.pad(bg_rates, (0, n_tot - len(bg_rates))).reshape(S, per))
 
-    init_pending, init_link, body, drain = make_pipeline_fns(
-        cfg, axis_name=axis_name, fault_schedule=fault_schedule)
+    init_pending, init_link, body, drain, init_ring = make_pipeline_fns(
+        cfg, axis_name=axis_name, fault_schedule=fault_schedule,
+        recorder=recorder)
 
     def seg_fn(carry: SimCarry, dest, guid, mcast, w_e, w_i, dl, bgr,
                n_windows):
         tables = RoutingTables(dest[0], guid[0], mcast[0])
-        st, pend, lstate = jax.tree_util.tree_map(lambda x: x[0], carry)
+        c0 = jax.tree_util.tree_map(lambda x: x[0], carry)
 
         def win(c, _):
             return body(c, tables, w_e[0], w_i[0], dl[0], bgr[0],
                         bg_weight)
 
-        (st, pend, lstate), stats = jax.lax.scan(
-            win, (st, pend, lstate), None, length=n_windows)
+        if recorder is not None:
+            scanned, stats = jax.lax.scan(
+                win, (c0.state, c0.pending, c0.link, c0.ring), None,
+                length=n_windows)
+        else:
+            scanned, stats = jax.lax.scan(
+                win, (c0.state, c0.pending, c0.link), None,
+                length=n_windows)
         return (jax.tree_util.tree_map(lambda x: x[None],
-                                       SimCarry(st, pend, lstate)),
+                                       SimCarry(*scanned)),
                 jax.tree_util.tree_map(lambda x: x[None], stats))
 
     def fin_fn(carry: SimCarry, w_e, w_i):
-        st, pend, lstate = jax.tree_util.tree_map(lambda x: x[0], carry)
-        st, miss_d = drain(st, pend, lstate, w_e[0], w_i[0])
+        c0 = jax.tree_util.tree_map(lambda x: x[0], carry)
+        st, miss_d = drain(c0.state, c0.pending, c0.link, w_e[0], w_i[0])
         return (jax.tree_util.tree_map(lambda x: x[None], st),
                 miss_d[None])
 
@@ -567,7 +619,9 @@ def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
         bcast = lambda a: jnp.broadcast_to(a[None], (S,) + a.shape)
         return SimCarry(state,
                         jax.tree_util.tree_map(bcast, init_pending()),
-                        jax.tree_util.tree_map(bcast, init_link()))
+                        jax.tree_util.tree_map(bcast, init_link()),
+                        (jax.tree_util.tree_map(bcast, init_ring())
+                         if init_ring is not None else None))
 
     return init, run_segment, finish
 
@@ -575,15 +629,21 @@ def build_sharded_segments(mesh, axis_name: str, cfg: SimConfig,
 def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partition,
                       bg_rates: np.ndarray, bg_weight: float = 87.8,
                       fault_schedule: fabric_faults.FaultSchedule |
-                      None = None):
+                      None = None,
+                      recorder=None):
     """Jitted multi-window simulator over a device mesh (whole-run form,
     composed from :func:`build_sharded_segments`: one segment + finish).
 
     Returns (init_fn(seed) -> stacked ShardState, run_fn(state, n_windows)
-    -> (state, stacked WindowStats over windows)).
+    -> (state, stacked WindowStats over windows)).  With
+    ``recorder=RecorderConfig(...)`` the run additionally returns the
+    final flight-recorder ring: ``run`` yields ``(state, stats, ring)``
+    (leading shard axis on every ring lane; decode with
+    ``repro.obs.ring_shard`` + ``ring_rows``).
     """
     seg_init, run_segment, finish = build_sharded_segments(
-        mesh, axis_name, cfg, part, bg_rates, bg_weight, fault_schedule)
+        mesh, axis_name, cfg, part, bg_rates, bg_weight, fault_schedule,
+        recorder=recorder)
     fresh = seg_init(0)        # pending/link halves are seed-independent
 
     def init(seed: int = 0):
@@ -591,12 +651,15 @@ def build_sharded_sim(mesh, axis_name: str, cfg: SimConfig, part: network.Partit
 
     def run(state, n_windows: int):
         carry, stats = run_segment(
-            SimCarry(state, fresh.pending, fresh.link), n_windows)
+            SimCarry(state, fresh.pending, fresh.link, fresh.ring),
+            n_windows)
         state, miss_d = finish(carry)
         if n_windows > 0:
             # the final flush's deadline misses land on the last window
             stats = stats._replace(
                 deadline_miss=stats.deadline_miss.at[:, -1].add(miss_d))
+        if recorder is not None:
+            return state, stats, carry.ring
         return state, stats
 
     return init, run

@@ -19,7 +19,6 @@ Production behaviours implemented (and exercised by tests/examples):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -29,6 +28,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, RingPrefetcher, shard_batch
 from repro.models.model import Model
 from repro.models.transformer import Runtime
+from repro.obs import spans as obs_spans
 from repro.train import step as step_lib
 
 
@@ -46,8 +46,12 @@ class Trainer:
     def __init__(self, model: Model, tcfg: step_lib.TrainConfig,
                  dcfg: DataConfig, run_cfg: TrainerConfig,
                  rt: Runtime | None = None, mesh=None,
-                 state_shardings=None):
+                 state_shardings=None,
+                 tracer: obs_spans.Tracer | None = None):
         self.model = model
+        # the span API replaces the raw perf_counter pair: a disabled
+        # (NULL) tracer still times the step for the straggler check
+        self.tracer = tracer if tracer is not None else obs_spans.NULL
         self.tcfg = tcfg
         self.dcfg = dcfg
         self.cfg = run_cfg
@@ -92,17 +96,18 @@ class Trainer:
         history = []
         try:
             for i in range(start, self.cfg.steps):
-                t0 = time.perf_counter()
-                step_idx, batch = data.next()
-                if extra_batch is not None:
-                    batch.update(extra_batch(self.model.cfg, batch))
-                if self.mesh is not None:
-                    batch = shard_batch(batch, self.mesh)
-                if (self.cfg.fail_at_step is not None
-                        and i == self.cfg.fail_at_step):
-                    raise RuntimeError("injected node failure")
-                state, metrics = self.train_step(state, batch)
-                dt = time.perf_counter() - t0
+                with self.tracer.span("train/step", track="train",
+                                      step=i) as sp:
+                    step_idx, batch = data.next()
+                    if extra_batch is not None:
+                        batch.update(extra_batch(self.model.cfg, batch))
+                    if self.mesh is not None:
+                        batch = shard_batch(batch, self.mesh)
+                    if (self.cfg.fail_at_step is not None
+                            and i == self.cfg.fail_at_step):
+                        raise RuntimeError("injected node failure")
+                    state, metrics = self.train_step(state, batch)
+                dt = sp.dur_s
                 self._straggler_check(dt)
                 if (i + 1) % self.cfg.log_every == 0 or i == start:
                     m = {k: float(np.asarray(v)) for k, v in metrics.items()}

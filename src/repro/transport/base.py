@@ -208,6 +208,18 @@ class LinkStats(NamedTuple):
                                  #   fault detour this window (some ring
                                  #   walked the long way around a dead
                                  #   link); 0 on a healthy fabric
+    stalled_by_link: jax.Array | None = None  # (K,) deferred events
+                                 #   attributed to the physical egress
+                                 #   link that refused them (global:
+                                 #   replicated admission replay, same on
+                                 #   every shard; sums to the GLOBAL
+                                 #   deferred total).  Only populated when
+                                 #   the transport is built with
+                                 #   ``stall_attribution=True`` — the
+                                 #   flight recorder's per-link congestion
+                                 #   lane.  None keeps uninstrumented
+                                 #   builds' stats pytree (and lowered
+                                 #   HLO) bit-identical to before.
 
 
 def zero_link_stats(max_hops: int = 0, ndim: int = 0) -> LinkStats:

@@ -99,6 +99,10 @@ class AdmissionOut(NamedTuple):
     links_done: jax.Array        # i32 — route length (detours included)
                                  #   of rows DELIVERED this window, 0 else
                                  #   (the honest per-event hop charge)
+    stalled_by_link: jax.Array | None = None  # (K,) i32 — deferred events
+                                 #   per refusing PHYSICAL egress link
+                                 #   (stall_attribution builds only; sums
+                                 #   to the global deferred total)
 
 def default_shape(n_shards: int) -> tuple[int, int]:
     """Most-square (nx, ny) factorization with nx <= ny (8 -> (2, 4),
@@ -181,8 +185,14 @@ class TorusTransport(base.Transport):
     def __init__(self, n_shards: int, dims: tuple[int, ...], *,
                  link_credits: int = 0, notify_latency: int = 2,
                  max_row_events: int = 0,
-                 wire_format: str | wire_framing.WireFormat = "extoll"):
+                 wire_format: str | wire_framing.WireFormat = "extoll",
+                 stall_attribution: bool = False):
         super().__init__(n_shards, wire_format=wire_format)
+        # per-link deferred-demand attribution for the flight recorder
+        # (repro.obs) — a python-level static flag: False compiles the
+        # exact pre-observability program (LinkStats.stalled_by_link
+        # stays None, so stats pytree and lowered HLO are unchanged)
+        self.stall_attribution = bool(stall_attribution)
         if 0 < link_credits < max_row_events:
             raise ValueError(
                 f"link_credits ({link_credits}) must be >= the largest "
@@ -325,6 +335,30 @@ class TorusTransport(base.Transport):
         return acc
 
     # -- canonical hop-by-hop admission with transit buffers ---------------
+    def _stall_attr(self, stall_hop_flat: jax.Array,
+                    counts_flat: jax.Array) -> jax.Array | None:
+        """(K,) deferred events per refusing PHYSICAL egress link — the
+        flight recorder's per-link congestion lane — or None unless built
+        with ``stall_attribution=True`` (None keeps uninstrumented stats
+        pytrees unchanged).
+
+        Every deferral is a hop-0 refusal under the transit-buffer model
+        (transit shortfalls park instead of deferring), so the blame
+        lands on the row's first egress link.  Computed from the
+        replicated admission replay, so the table is global — identical
+        on every shard and summing to the GLOBAL deferred total.  Row
+        axes longer than n² (the tenant replay's ``T*n²``) map onto
+        physical pairs modulo n².
+        """
+        if not self.stall_attribution:
+            return None
+        n2 = self.n_shards * self.n_shards
+        K = self.n_shards * self.n_links
+        pair = jnp.arange(stall_hop_flat.shape[0]) % n2
+        fl = self._link_seq[:, 0][pair]
+        return jnp.zeros((K,), jnp.int32).at[jnp.maximum(fl, 0)].add(
+            jnp.where((stall_hop_flat >= 0) & (fl >= 0), counts_flat, 0))
+
     def _admit_global(self, state: base.FabricState,
                       counts_all: jax.Array) -> AdmissionOut:
         """Replay the canonical two-phase admission over the global state.
@@ -487,6 +521,7 @@ class TorusTransport(base.Transport):
             links_done=jnp.where(
                 fresh_complete | resumed_complete,
                 self._route_len, 0).astype(jnp.int32).reshape(n, n),
+            stalled_by_link=self._stall_attr(stall_hop, flat),
         )
 
     # -- fault-aware admission ---------------------------------------------
@@ -704,6 +739,7 @@ class TorusTransport(base.Transport):
                       + unrot(rer_b, 0, jnp.int32)).reshape(n, n),
             links_done=(unrot(done_a, 0, jnp.int32)
                         + unrot(done_b, 0, jnp.int32)).reshape(n, n),
+            stalled_by_link=self._stall_attr(stall_hop, flat),
         )
 
     # -- one bidirectional ring phase --------------------------------------
@@ -990,6 +1026,7 @@ class TorusTransport(base.Transport):
             parked_by_hop=parked_by_hop,
             queue_dwell_us=dwell,
             rerouted=rerouted,
+            stalled_by_link=adm.stalled_by_link if throttled else None,
         )
         return base.TransportOut(
             state=state,
@@ -1099,7 +1136,8 @@ class Torus2DTransport(TorusTransport):
     def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
                  link_credits: int = 0, notify_latency: int = 2,
                  max_row_events: int = 0,
-                 wire_format: str | wire_framing.WireFormat = "extoll"):
+                 wire_format: str | wire_framing.WireFormat = "extoll",
+                 stall_attribution: bool = False):
         if not nx and not ny:
             nx, ny = default_shape(n_shards)
         elif not ny:
@@ -1109,7 +1147,8 @@ class Torus2DTransport(TorusTransport):
         super().__init__(n_shards, (nx, ny), link_credits=link_credits,
                          notify_latency=notify_latency,
                          max_row_events=max_row_events,
-                         wire_format=wire_format)
+                         wire_format=wire_format,
+                         stall_attribution=stall_attribution)
         self.nx, self.ny = nx, ny
 
 
@@ -1122,7 +1161,8 @@ class Torus3DTransport(TorusTransport):
     def __init__(self, n_shards: int, *, nx: int = 0, ny: int = 0,
                  nz: int = 0, link_credits: int = 0, notify_latency: int = 2,
                  max_row_events: int = 0,
-                 wire_format: str | wire_framing.WireFormat = "extoll"):
+                 wire_format: str | wire_framing.WireFormat = "extoll",
+                 stall_attribution: bool = False):
         known = [d for d in (nx, ny, nz) if d]
         if not known:
             nx, ny, nz = default_shape3d(n_shards)
@@ -1142,7 +1182,8 @@ class Torus3DTransport(TorusTransport):
         super().__init__(n_shards, (nx, ny, nz), link_credits=link_credits,
                          notify_latency=notify_latency,
                          max_row_events=max_row_events,
-                         wire_format=wire_format)
+                         wire_format=wire_format,
+                         stall_attribution=stall_attribution)
         self.nx, self.ny, self.nz = nx, ny, nz
 
 
@@ -1171,6 +1212,9 @@ class TenantAdmissionOut(NamedTuple):
     queue_events: jax.Array      # (T, n, n) parked events queued ahead
     rerouted: jax.Array          # (T, n, n) events delivered via detour
     links_done: jax.Array        # (T, n, n) delivered-route link counts
+    stalled_by_link: jax.Array | None = None  # (K,) deferred events per
+                                 #   refusing PHYSICAL link, all tenants
+                                 #   pooled (stall_attribution builds)
 
 
 class TenantTorusTransport(TorusTransport):
@@ -1223,7 +1267,8 @@ class TenantTorusTransport(TorusTransport):
     def __init__(self, n_shards: int, dims: tuple[int, ...], *,
                  partition: fc.CreditPartition, notify_latency: int = 2,
                  max_row_events: int = 0,
-                 wire_format: str | wire_framing.WireFormat = "extoll"):
+                 wire_format: str | wire_framing.WireFormat = "extoll",
+                 stall_attribution: bool = False):
         if partition.limit <= 0:
             raise ValueError("tenant partitioning needs link_credits > 0 "
                              "(an unthrottled fabric has nothing to split)")
@@ -1238,7 +1283,8 @@ class TenantTorusTransport(TorusTransport):
         super().__init__(n_shards, dims, link_credits=partition.limit,
                          notify_latency=notify_latency,
                          max_row_events=max_row_events,
-                         wire_format=wire_format)
+                         wire_format=wire_format,
+                         stall_attribution=stall_attribution)
         self.partition = partition
         self.n_tenants = partition.n_tenants
 
@@ -1450,6 +1496,8 @@ class TenantTorusTransport(TorusTransport):
                 fresh_complete.reshape(shape3)
                 | unrot(res_c, False, bool).reshape(shape3),
                 self._route_len.reshape(n, n)[None], 0).astype(jnp.int32),
+            stalled_by_link=self._stall_attr(
+                unrot(stall, -1, jnp.int32), flat),
         )
 
     def _admit_tenants_faulted(self, state: base.FabricState,
@@ -1688,6 +1736,8 @@ class TenantTorusTransport(TorusTransport):
                       + unrot(rer_b, 0, jnp.int32)).reshape(shape3),
             links_done=(unrot(done_a, 0, jnp.int32)
                         + unrot(done_b, 0, jnp.int32)).reshape(shape3),
+            stalled_by_link=self._stall_attr(
+                unrot(stall, -1, jnp.int32), flat),
         )
 
     # -- tenant bundle packing ---------------------------------------------
@@ -1877,6 +1927,8 @@ class TenantTorusTransport(TorusTransport):
             parked_by_hop=parked_by_hop,
             queue_dwell_us=dwell,
             rerouted=rerouted,
+            stalled_by_link=(adm.stalled_by_link if enforce_credits
+                             else None),
         )
         return base.TransportOut(
             state=state,

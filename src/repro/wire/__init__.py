@@ -29,8 +29,9 @@ from repro.wire.codec import (DEFAULT_WORD, WireWordFormat, decode_planar,
                               decode_words, encode_planar, encode_words)
 from repro.wire.framing import (WireFormat, frame_bytes, frame_count,
                                 frame_overhead_bytes, wire_efficiency)
-from repro.wire.latency import (LATENCY_BIN_EDGES_US, LatencySummary,
-                                hop_latency_us, queueing_latency_us,
+from repro.wire.latency import (LATENCY_BIN_EDGES_US, N_LATENCY_BINS,
+                                LatencySummary, hop_latency_us,
+                                percentile_from_hist, queueing_latency_us,
                                 summarize_latency, zero_latency_summary)
 from repro.wire.profiles import ETHERNET, EXTOLL, PROFILES, get_profile
 
@@ -39,7 +40,8 @@ __all__ = [
     "encode_planar", "decode_planar",
     "WireFormat", "frame_bytes", "frame_count", "frame_overhead_bytes",
     "wire_efficiency",
-    "LATENCY_BIN_EDGES_US", "LatencySummary", "hop_latency_us",
+    "LATENCY_BIN_EDGES_US", "N_LATENCY_BINS", "LatencySummary",
+    "hop_latency_us", "percentile_from_hist",
     "queueing_latency_us", "summarize_latency", "zero_latency_summary",
     "EXTOLL", "ETHERNET", "PROFILES", "get_profile",
 ]

@@ -41,7 +41,10 @@ def check_bench_artifacts() -> None:
     ``"smoke": true`` (Reporter does this for every --smoke row) and, as
     a belt for artifacts from before the flag, the shape fingerprints
     only a smoke run produces (transport/wire shrink to N=512 C=64;
-    bench_kernels shrinks lif_step_ref to N4096 from N65536)."""
+    bench_kernels shrinks lif_step_ref to N4096 from N65536).  Every row
+    must also carry its ``provenance`` block (git SHA, jax/jaxlib
+    versions, device count/platform) — an artifact that cannot answer
+    "what produced this number" is not diffable across PRs."""
     for path in sorted(ROOT.glob("BENCH_*.json")):
         rows = json.loads(path.read_text())
         for row in rows:
@@ -50,6 +53,13 @@ def check_bench_artifacts() -> None:
                 sys.exit(f"SMOKE ARTIFACT: {where} is from a --smoke run; "
                          f"refresh with a full `python -m benchmarks.run` "
                          f"before committing")
+            prov = row.get("provenance")
+            if not isinstance(prov, dict) or not {
+                    "git_sha", "jax", "jaxlib", "devices",
+                    "platform"} <= prov.keys():
+                sys.exit(f"NO PROVENANCE: {where} lacks the provenance "
+                         f"block (git_sha, jax/jaxlib, devices, platform); "
+                         f"refresh with a current `python -m benchmarks.run`")
             shape = str(row.get("shape", ""))
             if "N=512 C=64" in shape:
                 sys.exit(f"SMOKE ARTIFACT: {where} has smoke shape "
